@@ -1,0 +1,260 @@
+"""One benchmark per paper table/figure (NVR, DAC'25).
+
+Each ``figN_*`` function runs the corresponding experiment on the
+simulator / analytic model and returns (rows, headline-dict).  CSVs land in
+benchmarks/results/.  ``BENCH_SCALE`` (default 0.5) controls trace sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import analytic
+from repro.core.nvr import overhead, run_modes, simulate
+from repro.core.nvr.traces import WORKLOADS, make_trace
+
+SCALE = float(os.environ.get("BENCH_SCALE", "0.5"))
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+DTYPES = {"INT8": 1, "FP16": 2, "INT32": 4}
+
+
+def _write(name: str, header: str, rows: list) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def fig5_latency():
+    """Fig. 5: normalised wall-clock per workload x mode x dtype (+NSB)."""
+    rows = []
+    stall_red = {d: [] for d in DTYPES}
+    speedup = []
+    nsb_red = []
+    for dt_name, dtb in DTYPES.items():
+        for wl in WORKLOADS:
+            tr = make_trace(wl, dtype_bytes=dtb, scale=SCALE)
+            rs = {r.mode: r for r in run_modes(tr, dtb)}
+            ino = rs["inorder"]
+            for mode, r in rs.items():
+                rows.append((wl, dt_name, mode, f"{r.total:.0f}",
+                             f"{r.base:.0f}", f"{r.stall:.0f}",
+                             f"{r.total / ino.total:.4f}"))
+            if ino.stall:
+                stall_red[dt_name].append(1 - rs["nvr"].stall / ino.stall)
+            speedup.append(ino.total / rs["nvr"].total)
+            if dt_name == "INT32":   # Fig. 5(a): NSB at INT32
+                nvr_nsb = simulate(tr, "inorder", prefetcher="nvr",
+                                   nsb_kb=16)
+                rows.append((wl, dt_name, "nvr+nsb", f"{nvr_nsb.total:.0f}",
+                             f"{nvr_nsb.base:.0f}", f"{nvr_nsb.stall:.0f}",
+                             f"{nvr_nsb.total / ino.total:.4f}"))
+                if rs["nvr"].stall:
+                    nsb_red.append(1 - nvr_nsb.stall / rs["nvr"].stall)
+    headline = {
+        "stall_reduction_int8": statistics.mean(stall_red["INT8"]),
+        "stall_reduction_fp16": statistics.mean(stall_red["FP16"]),
+        "stall_reduction_int32": statistics.mean(stall_red["INT32"]),
+        "speedup_vs_noprefetch_geomean": statistics.geometric_mean(speedup),
+        "nsb_extra_stall_reduction": statistics.mean(nsb_red),
+        "paper": "98.3%/99.2%/97.3% stall red.; ~4x speedup; NSB -40%",
+    }
+    _write("fig5_latency.csv",
+           "workload,dtype,mode,total,base,stall,normalized", rows)
+    return rows, headline
+
+
+def fig6_prefetch():
+    """Fig. 6: accuracy & coverage per prefetcher + off-chip reduction."""
+    rows = []
+    acc = {p: [] for p in ("stream", "imp", "dvr", "nvr")}
+    cov = {p: [] for p in ("stream", "imp", "dvr", "nvr")}
+    nvr_load_red, nsb_extra, miss_red_sota = [], [], []
+    for wl in WORKLOADS:
+        tr = make_trace(wl, dtype_bytes=2, scale=SCALE)
+        rs = {r.mode: r for r in run_modes(tr, 2)}
+        ino = rs["inorder"]
+        for p in acc:
+            r = rs[p]
+            if np.isfinite(r.accuracy):
+                acc[p].append(r.accuracy)
+            cov[p].append(max(0.0, r.coverage))
+            rows.append((wl, p, f"{r.accuracy:.4f}", f"{r.coverage:.4f}",
+                         f"{r.demand_offchip:.0f}"))
+        if rs["nvr"].demand_offchip:
+            nvr_load_red.append(ino.demand_offchip
+                                / rs["nvr"].demand_offchip)
+        nsb = simulate(tr, "inorder", prefetcher="nvr", nsb_kb=16)
+        if nsb.demand_offchip:
+            nsb_extra.append(rs["nvr"].demand_offchip / nsb.demand_offchip)
+        best = min(rs["imp"].demand_misses, rs["dvr"].demand_misses)
+        if best:
+            miss_red_sota.append(1 - rs["nvr"].demand_misses / best)
+    headline = {
+        "nvr_accuracy_mean": statistics.mean(acc["nvr"]),
+        "nvr_coverage_mean": statistics.mean(cov["nvr"]),
+        "offchip_load_exec_reduction_x": statistics.median(nvr_load_red),
+        "nsb_extra_reduction_x": statistics.geometric_mean(
+            [max(x, 1.0) for x in nsb_extra]) if nsb_extra else 1.0,
+        "miss_reduction_vs_best_sota": statistics.mean(miss_red_sota),
+        "paper": ">90% acc/cov; 30x load-exec off-chip red., +5x NSB; ~90% "
+                 "miss red. vs SOTA",
+    }
+    _write("fig6_prefetch.csv",
+           "workload,prefetcher,accuracy,coverage,demand_offchip_bytes",
+           rows)
+    return rows, headline
+
+
+def fig7_bandwidth():
+    """Fig. 7: off-chip bandwidth (demand+prefetch) without/with NSB."""
+    rows = []
+    red, red_nsb = [], []
+    for wl in WORKLOADS:
+        tr = make_trace(wl, dtype_bytes=2, scale=SCALE)
+        ino = simulate(tr, "inorder")
+        nvr = simulate(tr, "inorder", prefetcher="nvr")
+        nvr_nsb = simulate(tr, "inorder", prefetcher="nvr", nsb_kb=16)
+        rows.append((wl, f"{ino.offchip:.0f}", f"{nvr.offchip:.0f}",
+                     f"{nvr_nsb.offchip:.0f}"))
+        red.append(1 - nvr.offchip / ino.offchip)
+        red_nsb.append(1 - nvr_nsb.offchip / ino.offchip)
+    headline = {
+        "bandwidth_reduction_vs_ino": statistics.mean(red),
+        "bandwidth_reduction_with_nsb": statistics.mean(red_nsb),
+        "paper": "~75% off-chip bandwidth reduction vs InO",
+    }
+    _write("fig7_bandwidth.csv",
+           "workload,ino_bytes,nvr_bytes,nvr_nsb_bytes", rows)
+    return rows, headline
+
+
+def fig8_llm_system():
+    """Fig. 8: LLM prefill/decode throughput vs bandwidth (analytic)."""
+    rows = analytic.fig8_sweep()
+    gains = [nvr / base for stage, _, _, base, nvr in rows
+             if stage == "decode"]
+    pre = [nvr / base for stage, _, bw, base, nvr in rows
+           if stage == "prefill" and bw <= 100]
+    headline = {
+        "decode_throughput_gain_mean": statistics.mean(gains),
+        "prefill_gain_lowbw_mean": statistics.mean(pre),
+        "paper": "avg +50% decode (IO-bound) throughput",
+    }
+    _write("fig8_llm_system.csv",
+           "stage,seq,bw_GBs,tok_s_base,tok_s_nvr",
+           [(s, q, f"{b:.0f}", f"{x:.1f}", f"{y:.1f}")
+            for s, q, b, x, y in rows])
+    return rows, headline
+
+
+def fig9_nsb_sensitivity():
+    """Fig. 9: NSB-vs-L2 scaling at equal area (perf = 1/latency/area)."""
+    rows = []
+    workloads = ["DS", "GAT", "MK", "H2O"]
+    # paper metric: perf = 1/(latency x NSB_KB x L2_KB); note that
+    # (256,16) and (1024,4) have EQUAL area products, so the comparison
+    # reduces to which quadrupling cuts latency more
+    configs = [(256, 4), (256, 8), (256, 16), (512, 4), (1024, 4)]
+    lat = {}
+    for l2, nsb in configs:
+        tot = []
+        for wl in workloads:
+            tr = make_trace(wl, dtype_bytes=4, scale=SCALE)
+            r = simulate(tr, "inorder", prefetcher="nvr", l2_kb=l2,
+                         nsb_kb=nsb)
+            tot.append(r.total)
+        lat[(l2, nsb)] = statistics.geometric_mean(tot)
+        p = 1e9 / (lat[(l2, nsb)] * l2 * nsb)
+        rows.append((l2, nsb, f"{lat[(l2, nsb)]:.0f}", f"{p:.4f}"))
+    nsb_gain = lat[(256, 4)] / lat[(256, 16)] - 1
+    l2_gain = lat[(256, 4)] / lat[(1024, 4)] - 1
+    headline = {
+        "nsb_4to16k_latency_gain": nsb_gain,
+        "l2_256to1024k_latency_gain": l2_gain,
+        "nsb_vs_l2_advantage_x": (nsb_gain / l2_gain) if l2_gain > 0
+        else float("inf"),
+        "paper": "4x NSB beats 4x L2 by ~5x at equal area product",
+    }
+    _write("fig9_nsb_sensitivity.csv", "l2_kb,nsb_kb,geomean_cycles,"
+           "perf_per_area", rows)
+    return rows, headline
+
+
+def ablation_nvr():
+    """BEYOND-PAPER: component ablation the paper does not include.
+
+    Quantifies each NVR component's contribution by disabling it:
+    SCD (indirect-chain resolution), LBD (boundary knowledge), VMIG
+    (vectorised issue), fuzzy fetch, and the runahead-depth sensitivity.
+    """
+    variants = {
+        "full": {},
+        "no_scd": {"scd": False},
+        "no_lbd": {"lbd": False},
+        "no_vmig": {"vmig": False},
+        "no_fuzzy": {"fuzzy_every": 0},
+        "depth_8": {"depth": 8},
+        "depth_24": {"depth": 24},
+        "depth_48": {"depth": 48},
+    }
+    rows = []
+    agg = {v: [] for v in variants}
+    for wl in WORKLOADS:
+        tr = make_trace(wl, dtype_bytes=2, scale=SCALE)
+        ino = simulate(tr, "inorder")
+        for vname, kw in variants.items():
+            r = simulate(tr, "inorder", prefetcher="nvr", pf_kwargs=kw)
+            sp = ino.total / r.total
+            agg[vname].append(sp)
+            rows.append((wl, vname, f"{r.total:.0f}", f"{r.demand_misses}",
+                         f"{sp:.3f}"))
+    gm = {v: statistics.geometric_mean(s) for v, s in agg.items()}
+    headline = {
+        "speedup_full": gm["full"],
+        "speedup_no_scd": gm["no_scd"],
+        "speedup_no_lbd": gm["no_lbd"],
+        "speedup_no_vmig": gm["no_vmig"],
+        "speedup_no_fuzzy": gm["no_fuzzy"],
+        "speedup_depth8": gm["depth_8"],
+        "paper": "(beyond-paper ablation) SCD is the load-bearing "
+                 "component; depth saturates by ~48",
+    }
+    _write("ablation_nvr.csv",
+           "workload,variant,total_cycles,demand_misses,speedup_vs_ino",
+           rows)
+    return rows, headline
+
+
+def table1_overhead():
+    rows = [(s.name, s.n, s.bits, s.paper_bits)
+            for s in overhead.table1()]
+    total = sum(r[2] for r in rows)
+    headline = {
+        "field_sum_kib": total / 8192,
+        "paper_headline_kib": overhead.PAPER_TOTAL_KIB,
+        "paper": "9.72 KiB control state (+16 KiB optional NSB)",
+    }
+    _write("table1_overhead.csv", "structure,N,field_sum_bits,paper_bits",
+           rows)
+    return rows, headline
+
+
+ALL = {
+    "fig5_latency": fig5_latency,
+    "fig6_prefetch": fig6_prefetch,
+    "fig7_bandwidth": fig7_bandwidth,
+    "fig8_llm_system": fig8_llm_system,
+    "fig9_nsb_sensitivity": fig9_nsb_sensitivity,
+    "table1_overhead": table1_overhead,
+    "ablation_nvr": ablation_nvr,     # beyond-paper component ablation
+}

@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) plus the
+per-figure headline metrics vs the paper's claims.  Detailed per-row CSVs
+are written to benchmarks/results/.
+
+  PYTHONPATH=src python -m benchmarks.run            # all figures
+  BENCH_SCALE=1.0 PYTHONPATH=src python -m benchmarks.run fig5_latency
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import paper_figs
+    names = sys.argv[1:] or list(paper_figs.ALL)
+    print("name,us_per_call,derived")
+    summaries = []
+    for name in names:
+        fn = paper_figs.ALL[name]
+        t0 = time.perf_counter()
+        rows, headline = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(f"{k}={v:.4g}" if isinstance(v, float)
+                           else f"{k}={v}" for k, v in headline.items()
+                           if k != "paper")
+        print(f"{name},{us:.0f},{derived}")
+        summaries.append((name, headline))
+    print("\n=== headline metrics vs paper claims ===")
+    for name, h in summaries:
+        print(f"[{name}]")
+        for k, v in h.items():
+            if k == "paper":
+                print(f"    paper claim : {v}")
+            else:
+                print(f"    {k:38s} {v:.4g}" if isinstance(v, float)
+                      else f"    {k:38s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Long-context sparse decode: the union-of-TopK distributed attention
+used by the long_500k dry-run cell, demonstrated on a host mesh.
+
+Shards the KV sequence across all local devices (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a multi-device
+run; works on 1 device too), decodes with per-shard TopK + LSE merge, and
+checks the result against the single-device sparse reference.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/long_context_decode.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import sparse_attention
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    b, s, kv, g, d, page = 1, 2048, 2, 4, 64, 16
+    k_pages = 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    kpage = jnp.asarray(k.reshape(b, s // page, page, kv, d).mean(2))
+    pos = jnp.asarray(s - 1, jnp.int32)
+
+    n_pages = s // page
+    with jax.set_mesh(mesh):
+        kd = jax.device_put(k, NamedSharding(mesh, P(None, "model")))
+        vd = jax.device_put(v, NamedSharding(mesh, P(None, "model")))
+        kpd = jax.device_put(kpage, NamedSharding(mesh, P(None, "model")))
+        # (1) full coverage: per-shard selection keeps everything, so the
+        # LSE merge must reproduce exact full attention
+        out_full = sparse_attention.sparse_decode_distributed(
+            q, kd, vd, kpd, pos, page=page, k_pages=n_pages, mesh=mesh,
+            seq_axes=("model",))
+        # (2) sparse budget: union-of-local-TopK (coverage-oriented
+        # superset of the global TopK)
+        out_k = sparse_attention.sparse_decode_distributed(
+            q, kd, vd, kpd, pos, page=page, k_pages=k_pages, mesh=mesh,
+            seq_axes=("model",))
+    dense = sparse_attention.sparse_decode(q, k, v, kpage, pos, page=page,
+                                           k_pages=n_pages)
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+    print(f"[long-context] devices={n_dev}: full-coverage distributed "
+          f"decode == exact attention  OK")
+    corr = np.corrcoef(np.asarray(out_k).ravel(),
+                       np.asarray(dense).ravel())[0, 1]
+    kept = min(4 * k_pages // max(1, n_dev), n_pages // max(1, n_dev)) \
+        * n_dev if n_dev > 1 else k_pages
+    print(f"[long-context] union-TopK budget ~{kept}/{n_pages} pages: "
+          f"corr(dist, exact)={corr:.3f} (random init = diffuse "
+          f"attention, the worst case for TopK)")
+    print("[long-context] distributed union-TopK sparse decode OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end serving driver: batched requests through the engine with the
+paper's TopK sparse-KV decode, reporting NSB hot-set statistics (the
+serving-layer mirror of Fig. 6(c)/Fig. 8).
+
+  PYTHONPATH=src python examples/serve_sparse_llm.py --batch 4 --gen 48
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.models import api
+from repro.serve.engine import Engine
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen2-1.5b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=96)
+    p.add_argument("--gen", type=int, default=48)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    cell = ShapeCell("serve", args.prompt_len, args.batch, "prefill")
+    batch = api.make_inputs(cfg, cell, key)
+    max_len = args.prompt_len + args.gen
+
+    dense = Engine(cfg, params, max_len=max_len, sparse=False)
+    dense.generate(batch, args.gen)
+    sparse = Engine(cfg, params, max_len=max_len, sparse=True, nsb_pages=48)
+    out = sparse.generate(batch, args.gen)
+    s = sparse.stats
+
+    pages_per_step_dense = max_len // cfg.kv_page      # full scan
+    pages_per_step_sparse = min(cfg.kv_topk_pages,
+                                max_len // cfg.kv_page)
+    print(f"[serve] {args.batch} requests x {args.gen} tokens "
+          f"({out.shape}) arch={cfg.name}")
+    print(f"[serve] KV pages touched/step: dense={pages_per_step_dense} "
+          f"sparse={pages_per_step_sparse} "
+          f"({pages_per_step_dense / pages_per_step_sparse:.1f}x fewer)")
+    print(f"[serve] NSB hot-set hit rate {s.hot_hit_rate:.1%} -> off-chip "
+          f"page fetches reduced a further "
+          f"{1 / max(1e-9, 1 - s.hot_hit_rate):.1f}x on top")
+    print("[serve] this is the paper's LLM decode story: TopK sparsity "
+          "cuts traffic, NVR+NSB make the remaining gathers cheap")
+
+
+if __name__ == "__main__":
+    main()

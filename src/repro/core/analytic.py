@@ -1,0 +1,76 @@
+"""LLMCompass-style analytic performance model (paper Fig. 8).
+
+Predicts prefill/decode throughput of a sparse-KV LLM as a function of
+off-chip bandwidth, with and without NVR.  The NVR effect enters as the
+*effective bandwidth efficiency* of irregular KV gathers: without
+prefetching, scattered reads expose DRAM latency and rigid DMA granularity
+(efficiency ~0.5); NVR's runahead + VMIG packing raises it to ~0.9 (its
+measured coverage) — matching the paper's +50 % decode-throughput claim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class NPUSpec:
+    flops: float = 128e12          # dense peak FLOP/s
+    sram_kb: int = 256
+    eff_regular: float = 0.85      # streaming DRAM efficiency
+    eff_irregular: float = 0.50    # scattered-gather efficiency, no prefetch
+    eff_nvr: float = 0.90          # with NVR (paper coverage >90 %)
+
+
+@dataclass(frozen=True)
+class LLMSpec:
+    n_params: float = 7e9
+    n_layers: int = 32
+    d_model: int = 4096
+    n_kv_heads: int = 8
+    head_dim: int = 128
+    bytes_per_el: int = 2
+    kv_sparsity: float = 1 / 16.0  # Double-Sparsity TopK fraction
+
+
+def prefill_throughput(m: LLMSpec, hw: NPUSpec, bw: float, seq: int,
+                       nvr: bool) -> float:
+    """Tokens/s for the (compute-bound) prefill stage."""
+    flops_per_tok = 2 * m.n_params + 4 * m.n_layers * m.d_model * seq
+    t_compute = flops_per_tok / hw.flops
+    bytes_per_tok = m.n_params * m.bytes_per_el / seq  # weights amortised
+    eff = hw.eff_regular if not nvr else max(hw.eff_regular, 0.9)
+    t_mem = bytes_per_tok / (bw * eff)
+    return 1.0 / max(t_compute, t_mem)
+
+
+def decode_throughput(m: LLMSpec, hw: NPUSpec, bw: float, seq: int,
+                      batch: int, nvr: bool) -> float:
+    """Tokens/s/batch for the (IO-bound) decode stage with sparse KV."""
+    kv_bytes_tok = (2 * m.n_layers * seq * m.kv_sparsity
+                    * m.n_kv_heads * m.head_dim * m.bytes_per_el)
+    w_bytes_tok = m.n_params * m.bytes_per_el / batch
+    eff_kv = hw.eff_nvr if nvr else hw.eff_irregular
+    t_kv = kv_bytes_tok / (bw * eff_kv)
+    t_w = w_bytes_tok / (bw * hw.eff_regular)
+    flops_per_tok = 2 * m.n_params / batch * 0 + 2 * m.n_params
+    t_compute = flops_per_tok / hw.flops
+    return batch / max(t_kv + t_w, t_compute)
+
+
+def fig8_sweep(bws=None, seqs=(8192, 16384, 32768), batch: int = 64):
+    """Returns rows: (stage, seq, bw_GBs, base_tok_s, nvr_tok_s)."""
+    m, hw = LLMSpec(), NPUSpec()
+    bws = bws or np.array([25, 50, 100, 200, 400, 800]) * 1e9
+    rows = []
+    for seq in seqs:
+        for bw in bws:
+            rows.append(("prefill", seq, bw / 1e9,
+                         prefill_throughput(m, hw, bw, seq, False),
+                         prefill_throughput(m, hw, bw, seq, True)))
+            rows.append(("decode", seq, bw / 1e9,
+                         decode_throughput(m, hw, bw, seq, batch, False),
+                         decode_throughput(m, hw, bw, seq, batch, True)))
+    return rows

@@ -1,0 +1,14 @@
+"""Paper-faithful NVR simulator: NPU + cache hierarchy + prefetchers."""
+
+from .machine import Cache, DRAM, Hierarchy, make_hierarchy, LINE_BYTES
+from .prefetchers import DVR, IMP, NVR, PREFETCHERS, StreamPrefetcher
+from .sim import MODES_FIG5, SimResult, SweepResult, run_modes, simulate
+from .trace import Compute, Trace, TraceBuilder, VLoad
+from .traces import WORKLOADS, make_trace
+
+__all__ = [
+    "Cache", "DRAM", "Hierarchy", "make_hierarchy", "LINE_BYTES",
+    "DVR", "IMP", "NVR", "PREFETCHERS", "StreamPrefetcher",
+    "MODES_FIG5", "SimResult", "SweepResult", "run_modes", "simulate",
+    "Compute", "Trace", "TraceBuilder", "VLoad", "WORKLOADS", "make_trace",
+]

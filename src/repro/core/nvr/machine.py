@@ -1,0 +1,280 @@
+"""Memory-system model for the NVR simulator (paper-faithful layer).
+
+Models the Gemmini-like NPU memory hierarchy from the paper:
+
+    NPU <-> [optional NSB (16 KB, high-assoc, MSHRs)] <-> shared L2 <-> DRAM
+
+All structures operate on *cache lines* (64 B).  The DRAM model is a simple
+latency + bandwidth-occupancy queue: each line fetch occupies the channel for
+``line_bytes / bytes_per_cycle`` cycles, so prefetchers that waste bandwidth
+(low accuracy) produce real queuing slowdown — this is how the paper's
+"stream prefetchers occasionally introduce performance penalties" emerges.
+
+Everything is deterministic; no wall-clock or RNG in this module.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+
+LINE_BYTES = 64
+
+
+def line_of(addr: int) -> int:
+    return addr // LINE_BYTES
+
+
+@dataclass
+class DRAM:
+    """Latency + bandwidth-occupancy DRAM channel model."""
+
+    latency: float = 150.0          # cycles, unloaded
+    bytes_per_cycle: float = 16.0   # channel bandwidth
+    busy_until: float = 0.0         # channel occupancy clock
+    bytes_transferred: float = 0.0  # total off-chip traffic (demand+prefetch)
+
+    def fetch(self, now: float, nbytes: int = LINE_BYTES) -> float:
+        """Issue a line fetch at cycle ``now``; returns completion cycle."""
+        occupancy = nbytes / self.bytes_per_cycle
+        start = max(now, self.busy_until)
+        self.busy_until = start + occupancy
+        self.bytes_transferred += nbytes
+        return start + occupancy + self.latency
+
+    def reset(self) -> None:
+        self.busy_until = 0.0
+        self.bytes_transferred = 0.0
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    demand_misses: int = 0
+    prefetch_fills: int = 0
+    prefetch_used: int = 0
+    prefetch_unused_evicted: int = 0
+    coalesced: int = 0  # MSHR hits on in-flight lines
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+
+class Cache:
+    """Set-associative, LRU, non-blocking (MSHR) cache.
+
+    ``lookup`` returns the cycle at which the line is available (for hits the
+    access latency; for in-flight MSHR lines the fill time; misses return
+    ``None`` and the caller decides where to fetch from).
+
+    Prefetch fills are tagged so accuracy (used / issued) can be measured.
+    """
+
+    def __init__(self, size_bytes: int, ways: int, hit_latency: float,
+                 name: str = "L2") -> None:
+        self.name = name
+        self.size_bytes = size_bytes
+        self.ways = ways
+        self.hit_latency = hit_latency
+        self.num_sets = max(1, size_bytes // LINE_BYTES // ways)
+        # per-set OrderedDict: line -> (fill_cycle, was_prefetch, used)
+        self.sets: list[OrderedDict] = [OrderedDict() for _ in range(self.num_sets)]
+        self.mshr: dict[int, float] = {}   # line -> ready cycle (in flight)
+        self.mshr_prefetch: set[int] = set()
+        self.stats = CacheStats()
+
+    # -- internals ---------------------------------------------------------
+    def _set(self, line: int) -> OrderedDict:
+        return self.sets[line % self.num_sets]
+
+    def present(self, line: int, now: float) -> bool:
+        s = self._set(line)
+        if line in s:
+            return True
+        return line in self.mshr and self.mshr[line] <= now
+
+    def probe(self, line: int, now: float, demand: bool = True) -> float | None:
+        """Access ``line`` at ``now``.  Returns availability cycle or None."""
+        s = self._set(line)
+        if line in s:
+            fill, was_pf, used = s[line]
+            if was_pf and not used and demand:
+                self.stats.prefetch_used += 1
+            s[line] = (fill, was_pf, True if demand else used)
+            s.move_to_end(line)
+            self.stats.hits += 1
+            return now + self.hit_latency
+        if line in self.mshr:
+            ready = self.mshr[line]
+            if ready <= now:
+                # fill completed: install
+                self._install(line, ready,
+                              was_prefetch=line in self.mshr_prefetch,
+                              used=demand)
+                if line in self.mshr_prefetch and demand:
+                    self.stats.prefetch_used += 1
+                del self.mshr[line]
+                self.mshr_prefetch.discard(line)
+                self.stats.hits += 1
+                return now + self.hit_latency
+            # still in flight: MSHR coalescing — wait for it, no new fetch
+            self.stats.coalesced += 1
+            if line in self.mshr_prefetch and demand:
+                self.stats.prefetch_used += 1
+                self.mshr_prefetch.discard(line)  # count once
+            self.stats.hits += 1  # not an off-chip miss
+            return ready + self.hit_latency
+        self.stats.misses += 1
+        if demand:
+            self.stats.demand_misses += 1
+        return None
+
+    def _install(self, line: int, fill_cycle: float, was_prefetch: bool,
+                 used: bool) -> None:
+        s = self._set(line)
+        if line in s:
+            return
+        if len(s) >= self.ways:
+            _, (f, pf, u) = s.popitem(last=False)  # LRU eviction
+            if pf and not u:
+                self.stats.prefetch_unused_evicted += 1
+        s[line] = (fill_cycle, was_prefetch, used)
+
+    def fill(self, line: int, ready: float, prefetch: bool = False) -> None:
+        """Register an incoming fill (from DRAM or lower level)."""
+        if line in self.mshr:
+            self.mshr[line] = min(self.mshr[line], ready)
+            return
+        s = self._set(line)
+        if line in s:
+            return
+        self.mshr[line] = ready
+        if prefetch:
+            self.mshr_prefetch.add(line)
+            self.stats.prefetch_fills += 1
+
+    def drain(self, now: float) -> None:
+        """Install all fills that have completed by ``now``."""
+        done = [l for l, r in self.mshr.items() if r <= now]
+        for l in done:
+            self._install(l, self.mshr[l], l in self.mshr_prefetch, False)
+            del self.mshr[l]
+            self.mshr_prefetch.discard(l)
+
+    def reset(self) -> None:
+        self.sets = [OrderedDict() for _ in range(self.num_sets)]
+        self.mshr.clear()
+        self.mshr_prefetch.clear()
+        self.stats = CacheStats()
+
+
+@dataclass
+class Hierarchy:
+    """L2 (+ optional NSB) + DRAM, with simple fetch plumbing.
+
+    The NSB sits in front of L2 *for indirect (discrete) lines only*, per the
+    paper (§IV-G): dense/continuous data stays in the scratchpad (modelled as
+    always-hit) while sparse discrete data benefits from implicit cache-line
+    reuse in the small high-associativity NSB.
+    """
+
+    l2: Cache
+    dram: DRAM
+    nsb: Cache | None = None
+    demand_offchip_bytes: float = 0.0
+    prefetch_offchip_bytes: float = 0.0
+
+    def _dram_fill(self, line: int, now: float, granule_lines: int,
+                   also_nsb: bool, skip_l2: bool = False) -> float:
+        """Fetch ``line`` from DRAM at scratchpad-DMA granularity.
+
+        NPUs without µ-instruction-level prefetch issue *rigid* preload DMAs
+        (paper §II-B / §IV-F): the whole aligned granule is transferred even
+        if only one line is needed.  VMIG-restructured (prefetcher) accesses
+        bypass this and are line-granular (granule_lines=1).
+        """
+        ready = self.dram.fetch(now, nbytes=granule_lines * LINE_BYTES)
+        self.demand_offchip_bytes += granule_lines * LINE_BYTES
+        # only the demanded line is architecturally useful: the rest of the
+        # rigid DMA granule is padding streamed into the scratchpad, not
+        # cacheable for reuse (it wastes bandwidth, not cache capacity)
+        if not skip_l2:
+            self.l2.fill(line, ready)
+        if also_nsb and self.nsb is not None:
+            self.nsb.fill(line, ready)
+        return ready
+
+    def access(self, line: int, now: float, indirect: bool,
+               granule_lines: int = 1) -> float:
+        """Demand access; returns data-ready cycle."""
+        if self.nsb is not None and indirect:
+            t = self.nsb.probe(line, now)
+            if t is not None:
+                return t
+            # NSB miss -> L2 (fill NSB on return)
+            t2 = self.l2.probe(line, now + self.nsb.hit_latency)
+            if t2 is None:
+                ready = self._dram_fill(line, now + self.nsb.hit_latency,
+                                        granule_lines, also_nsb=True)
+                return ready + self.nsb.hit_latency
+            self.nsb.fill(line, t2)
+            return t2
+        t = self.l2.probe(line, now)
+        if t is not None:
+            return t
+        ready = self._dram_fill(line, now, granule_lines, also_nsb=False)
+        return ready + self.l2.hit_latency
+
+    def prefetch(self, line: int, now: float, into_nsb: bool = False) -> None:
+        """Prefetch ``line``; fills L2 (and optionally NSB)."""
+        target = self.nsb if (into_nsb and self.nsb is not None) else self.l2
+        if target.present(line, now) or line in target.mshr:
+            return
+        if target is self.nsb:
+            if self.l2.present(line, now):
+                # already on-chip: move into NSB without off-chip traffic
+                self.nsb.fill(line, now + self.l2.hit_latency, prefetch=True)
+                return
+            if line in self.l2.mshr:
+                # in flight from a far (L2-level) prefetch: forward the fill
+                self.nsb.fill(line, self.l2.mshr[line], prefetch=True)
+                return
+        ready = self.dram.fetch(now)
+        self.prefetch_offchip_bytes += LINE_BYTES
+        target.fill(line, ready, prefetch=True)
+        if target is self.nsb:
+            self.l2.fill(line, ready)
+
+    def drain(self, now: float) -> None:
+        self.l2.drain(now)
+        if self.nsb is not None:
+            self.nsb.drain(now)
+
+    @property
+    def offchip_bytes(self) -> float:
+        return self.demand_offchip_bytes + self.prefetch_offchip_bytes
+
+
+def cache_latency(size_kb: int, base_kb: int = 256,
+                  base_lat: float = 20.0) -> float:
+    """CACTI-style access-latency scaling: bigger SRAM arrays are slower —
+    the physical argument for the paper's small NSB.  Exponent 0.3 sits
+    between wire-delay (0.5) and bank-parallel (0) regimes; Fig. 9's
+    NSB-vs-L2 ratio is sensitive to it (see EXPERIMENTS.md §Deviations)."""
+    return base_lat * (size_kb / base_kb) ** 0.3
+
+
+def make_hierarchy(l2_kb: int = 256, nsb_kb: int = 0,
+                   dram_latency: float = 150.0,
+                   dram_bw: float = 16.0) -> Hierarchy:
+    l2 = Cache(l2_kb * 1024, ways=8, hit_latency=cache_latency(l2_kb),
+               name="L2")
+    nsb = None
+    if nsb_kb:
+        nsb = Cache(nsb_kb * 1024, ways=16,
+                    hit_latency=cache_latency(nsb_kb, 16, 2.0), name="NSB")
+    return Hierarchy(l2=l2, dram=DRAM(latency=dram_latency,
+                                      bytes_per_cycle=dram_bw), nsb=nsb)

@@ -1,0 +1,263 @@
+"""Prefetcher models: stream [35], IMP [36], DVR [11][20], and NVR (ours).
+
+Each prefetcher observes exactly what its hardware mechanism could observe:
+
+* ``StreamPrefetcher`` — per-PC reference prediction table (addr, stride,
+  confidence).  Covers sequential streams; mispredicts on indirect PCs and
+  wastes bandwidth (the paper's "stream prefetchers occasionally introduce
+  performance penalties").
+* ``IMP`` — learns the indirect mapping ``addr = base + (idx << shift)`` per
+  index-PC, then, when an index vector load completes, prefetches the
+  *current batch*'s gather targets.  One-batch-ahead only: it cannot
+  dereference future index values (no runahead), so latency hiding is
+  partial and deep/dynamic chains (MK hash probes) are not covered.
+* ``DVR`` — vector runahead triggered *on a demand L2 miss*: speculatively
+  executes the dependency chain ahead (it can dereference future indices),
+  vectorised 16-wide, up to a runahead window.  Boundary-blind: at sparse
+  (dynamic) loop boundaries its fixed-trip-count assumption mispredicts,
+  producing junk prefetches and lost coverage (modelled with a
+  deterministic per-bound hash).
+* ``NVR`` — enters runahead when a load *executes* (not when it misses),
+  snoops exact sparse boundaries (LBD) and index chains (SCD) from the NPU
+  sparse unit, bundles prefetches into vector requests (VMIG) and issues
+  them far ahead.  Coverage-oriented fuzzy-range loading adds a small
+  deterministic over-fetch (accuracy < 100 %, coverage ≈ 100 %).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .machine import LINE_BYTES, Hierarchy
+from .trace import Compute, Trace, VLoad
+
+
+def _lines(addrs: np.ndarray) -> np.ndarray:
+    return np.unique(addrs // LINE_BYTES)
+
+
+class Prefetcher:
+    name = "none"
+    mshr_cap = 10 ** 9  # max prefetch lines in flight (hardware MSHR bound)
+
+    def __init__(self) -> None:
+        self.issued_lines = 0
+
+    def _issue(self, hier: Hierarchy, line: int, now: float,
+               into_nsb: bool = False) -> bool:
+        if len(hier.l2.mshr) >= self.mshr_cap:
+            return False
+        self.issued_lines += 1
+        hier.prefetch(int(line), now, into_nsb=into_nsb)
+        return True
+
+    def on_vload(self, i: int, op: VLoad, trace: Trace, now: float,
+                 hier: Hierarchy) -> None:  # pragma: no cover - interface
+        pass
+
+    def on_miss(self, i: int, op: VLoad, trace: Trace, now: float,
+                hier: Hierarchy) -> None:  # pragma: no cover - interface
+        pass
+
+
+class StreamPrefetcher(Prefetcher):
+    name = "stream"
+
+    def __init__(self, depth: int = 4) -> None:
+        super().__init__()
+        self.depth = depth
+        self.table: dict[int, tuple[int, int, int]] = {}  # pc -> (last, stride, conf)
+
+    def on_vload(self, i, op, trace, now, hier) -> None:
+        a0 = int(op.addrs[0])
+        span = int(op.addrs[-1]) - a0 + LINE_BYTES
+        last, stride, conf = self.table.get(op.pc, (a0, 0, 0))
+        new_stride = a0 - last
+        if new_stride == stride and stride != 0:
+            conf = min(conf + 1, 3)
+        else:
+            conf = 0
+        self.table[op.pc] = (a0, new_stride, conf)
+        if conf >= 2:
+            for k in range(1, self.depth + 1):
+                base = a0 + k * new_stride
+                for ln in range((base // LINE_BYTES),
+                                (base + span) // LINE_BYTES + 1):
+                    self._issue(hier, ln, now)
+
+
+class IMP(Prefetcher):
+    name = "imp"
+    mshr_cap = 64
+
+    def __init__(self, learn_after: int = 2, lookahead_ops: int = 40,
+                 max_chains: int = 2) -> None:
+        super().__init__()
+        self.learn_after = learn_after
+        self.lookahead_ops = lookahead_ops
+        self.max_chains = max_chains  # IPT capacity per index stream
+        self.observed: dict[int, int] = {}     # idx_pc -> #observations
+        self.chains: dict[int, list[int]] = {}  # idx_pc -> learned gather PCs
+        self.stream = StreamPrefetcher(depth=2)
+
+    def on_vload(self, i, op, trace, now, hier) -> None:
+        # stream component covers the index/weight streams themselves
+        self.stream.issued_lines = self.issued_lines
+        self.stream.on_vload(i, op, trace, now, hier)
+        self.issued_lines = self.stream.issued_lines
+        if op.kind == "indirect":
+            self.observed[op.idx_pc] = self.observed.get(op.idx_pc, 0) + 1
+            learned = self.chains.setdefault(op.idx_pc, [])
+            # limited pattern-table capacity: only the first ``max_chains``
+            # (idx_pc -> gather_pc) mappings are captured — deep/multi-slice
+            # chains exceed the IPT (the paper's §II-C criticism)
+            if op.pc not in learned and len(learned) < self.max_chains:
+                learned.append(op.pc)
+            return
+        # an index stream load completed: prefetch this batch's gather
+        # targets (the values just became architecturally visible)
+        pc = op.pc
+        if self.observed.get(pc, 0) < self.learn_after:
+            return
+        learned = self.chains.get(pc, [])
+        bound = op.bound_id
+        for j in range(i + 1, min(len(trace.ops), i + 1 + self.lookahead_ops)):
+            nxt = trace.ops[j]
+            if isinstance(nxt, Compute):
+                continue
+            if nxt.bound_id != bound:
+                break  # IMP has no loop-boundary knowledge beyond the batch
+            if nxt.kind == "indirect" and nxt.idx_pc == pc and nxt.pc in learned:
+                for ln in _lines(nxt.addrs):
+                    self._issue(hier, ln, now)
+
+
+class DVR(Prefetcher):
+    name = "dvr"
+    mshr_cap = 128
+
+    def __init__(self, window: int = 48, issue_width: int = 16) -> None:
+        super().__init__()
+        self.window = window
+        self.issue_width = issue_width
+
+    @staticmethod
+    def _bound_ok(op: VLoad) -> bool:
+        # deterministic boundary-speculation outcome: ~72 % of cross-bound
+        # chains survive the fixed-trip-count assumption
+        return (op.bound_id * 2654435761 + op.pc) % 100 < 72
+
+    def on_miss(self, i, op, trace, now, hier) -> None:
+        cur = op.bound_id
+        seen = 0
+        t = now
+        for j in range(i + 1, len(trace.ops)):
+            if seen >= self.window:
+                break
+            nxt = trace.ops[j]
+            if isinstance(nxt, Compute):
+                continue
+            seen += 1
+            # runahead issue rate: issue_width lines per cycle group
+            t += 1.0 / self.issue_width
+            if nxt.bound_id == cur or self._bound_ok(nxt):
+                for ln in _lines(nxt.addrs):
+                    self._issue(hier, ln, t)
+            else:
+                # boundary mispredict: junk prefetch past the row end
+                junk = int(nxt.addrs[-1] // LINE_BYTES) + 4
+                for k in range(min(4, len(nxt.addrs))):
+                    self._issue(hier, junk + k, t)
+
+
+class NVR(Prefetcher):
+    """NPU Vector Runahead: SD + SCD + LBD + VMIG (+ optional NSB fill)."""
+
+    name = "nvr"
+    mshr_cap = 256
+
+    def __init__(self, depth: int = 96, fuzzy_every: int = 8,
+                 fill_nsb: bool = False, near_depth: int = 12,
+                 scd: bool = True, lbd: bool = True,
+                 vmig: bool = True) -> None:
+        """Component flags support the ablation study
+        (benchmarks/paper_figs.py::ablation_nvr):
+          scd=False  — no Sparse Chain Detector: indirect targets cannot
+                       be computed ahead; only stream PCs prefetch.
+          lbd=False  — boundary-blind: cross-bound chains mispredict like
+                       DVR's fixed-trip-count assumption.
+          vmig=False — scalar issue (1 line/cycle) instead of 16-wide
+                       vectorised micro-instruction bundles.
+        """
+        super().__init__()
+        self.depth = depth              # far runahead window, in vector loads
+        self.near_depth = near_depth    # near window staged into the NSB
+        self.fuzzy_every = fuzzy_every  # fuzzy-range over-fetch granularity
+        self.fill_nsb = fill_nsb
+        self.scd = scd
+        self.lbd = lbd
+        self.vmig = vmig
+        self._covered_until = -1
+        self._near_until = -1
+        self._fuzzy_ctr = 0
+
+    def on_vload(self, i, op, trace, now, hier) -> None:
+        # runahead entered when a load executes in the ROB (Q&A1): extend
+        # coverage to [i, i+depth] — bounds are exact via LBD snooping.
+        start = max(i + 1, self._covered_until + 1)
+        end = min(len(trace.ops), i + 1 + self.depth)
+        t = now
+        cur_bound = op.bound_id
+        for j in range(start, end):
+            nxt = trace.ops[j]
+            if isinstance(nxt, Compute):
+                self._covered_until = j
+                continue
+            if not self.scd and nxt.kind == "indirect":
+                self._covered_until = j   # chain unresolvable without SCD
+                continue
+            lines = _lines(nxt.addrs)
+            if len(hier.l2.mshr) + len(lines) > self.mshr_cap:
+                break  # MSHR-file full: resume next trigger (non-blocking)
+            t += (1.0 / 16.0) if self.vmig else float(len(lines))
+            if not self.lbd and nxt.bound_id != cur_bound \
+                    and not DVR._bound_ok(nxt):
+                # boundary-blind: mispredicted chain past the row end
+                junk = int(nxt.addrs[-1] // LINE_BYTES) + 4
+                for kk in range(min(4, len(lines))):
+                    self._issue(hier, junk + kk, t)
+                self._covered_until = j
+                continue
+            for ln in lines:
+                self._issue(hier, ln, t)
+            if nxt.kind == "indirect":
+                # coverage-oriented fuzzy range loading: deterministic
+                # trailing-line over-fetch every ``fuzzy_every`` rows
+                # (fuzzy_every=0 disables — ablation knob)
+                self._fuzzy_ctr += 1
+                if self.fuzzy_every and \
+                        self._fuzzy_ctr % self.fuzzy_every == 0:
+                    self._issue(hier, int(lines[-1]) + 1, t)
+            self._covered_until = j
+        if not self.fill_nsb:
+            return
+        # near window: stage imminently-needed indirect lines from L2 (or
+        # the in-flight far prefetch) into the NSB — this is what cuts
+        # NPU-to-L2 latency during actual load execution (paper §IV-G)
+        nstart = max(i + 1, self._near_until + 1)
+        nend = min(len(trace.ops), i + 1 + self.near_depth)
+        for j in range(nstart, nend):
+            nxt = trace.ops[j]
+            self._near_until = j
+            if isinstance(nxt, Compute) or nxt.kind != "indirect":
+                continue
+            for ln in _lines(nxt.addrs):
+                self._issue(hier, ln, now, into_nsb=True)
+
+
+PREFETCHERS = {
+    "stream": StreamPrefetcher,
+    "imp": IMP,
+    "dvr": DVR,
+    "nvr": NVR,
+}

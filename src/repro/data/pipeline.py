@@ -1,0 +1,64 @@
+"""Deterministic, shardable synthetic token pipeline.
+
+Each (step, global-example) pair maps to a seed, so any host can
+reconstruct exactly its shard of any step's batch — restart/elastic-safe by
+construction (no iterator state to checkpoint beyond the step counter).
+Batches are a Zipf-ish token mixture with induction-head structure
+(repeated bigrams) so small models show a real, monotonic learnable signal.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 17
+
+
+def _example(rng: np.random.Generator, cfg: DataConfig) -> np.ndarray:
+    v = cfg.vocab
+    s = cfg.seq_len
+    base = rng.zipf(1.5, size=s).clip(1, v - 1)
+    # induction structure: copy a window later in the sequence
+    w = max(2, s // 8)
+    start = rng.integers(0, s - 2 * w)
+    dst = rng.integers(start + w, s - w)
+    base[dst:dst + w] = base[start:start + w]
+    return base.astype(np.int32)
+
+
+def batch_at(step: int, cfg: DataConfig, shard: tuple[int, int] = (0, 1)):
+    """Return (tokens, labels) for this host's shard of batch ``step``.
+
+    shard = (index, count) along the global batch dim.
+    """
+    idx, count = shard
+    per = cfg.global_batch // count
+    rows = []
+    for i in range(per):
+        ex = idx * per + i
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, ex]))
+        rows.append(_example(rng, cfg))
+    toks = np.stack(rows)
+    labels = np.roll(toks, -1, axis=1)
+    labels[:, -1] = 0
+    return jnp.asarray(toks), jnp.asarray(labels)
+
+
+def batches(cfg: DataConfig, start_step: int = 0,
+            shard: tuple[int, int] = (0, 1)):
+    step = start_step
+    while True:
+        yield step, batch_at(step, cfg, shard)
+        step += 1

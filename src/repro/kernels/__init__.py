@@ -1,0 +1,13 @@
+"""NVR TPU kernels: runahead gather, sparse SpMM, TopK decode attention,
+grouped MoE GEMM.  See ops.py for the public API, ref.py for oracles."""
+
+from .flash_prefill import flash_prefill
+from .ops import (coalesce_indices, csr_to_ell, gather_rows, gather_spmm,
+                  group_tokens_by_expert, moe_dispatch_matmul, on_tpu,
+                  sparse_decode_attn, topk_pages)
+
+__all__ = [
+    "coalesce_indices", "csr_to_ell", "flash_prefill", "gather_rows",
+    "gather_spmm", "group_tokens_by_expert", "moe_dispatch_matmul",
+    "on_tpu", "sparse_decode_attn", "topk_pages",
+]

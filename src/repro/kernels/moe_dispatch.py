@@ -1,0 +1,69 @@
+"""Grouped (block-diagonal) MoE expert GEMM with ragged-bound runahead.
+
+Tokens arrive *sorted by expert* and padded so no token block spans two
+experts (the VMIG-coalescing analogue, done in ``ops.py``).  The per-block
+expert id — the dynamic loop boundary the paper's LBD snoops from the NPU
+sparse unit — is scalar-prefetched, so the expert weight tile for block
+``t+1`` is DMA'd from HBM while block ``t`` is in the MXU.
+
+out[t_block] = x[t_block] @ W[group_id[t_block]]        (MegaBlocks-style)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_kernel(gid_ref, x_ref, w_ref, out_ref, acc_ref, *, n_kblocks: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kb == n_kblocks - 1)
+    def _fini():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "block_d",
+                                             "interpret"))
+def moe_dispatch_matmul(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
+                        block_t: int = 0, block_f: int = 0, block_d: int = 0,
+                        interpret: bool = True) -> jax.Array:
+    """x [T, D] (expert-sorted, block-aligned), w [E, D, F] -> out [T, F].
+
+    group_ids: int32 [T // block_t] expert id per token block.
+    """
+    t, d = x.shape
+    e, _, f = w.shape
+    bt = block_t or min(t, 128)
+    bf = block_f or min(f, 128)
+    bd = block_d or min(d, 512)
+    assert t % bt == 0 and f % bf == 0 and d % bd == 0
+    assert group_ids.shape == (t // bt,)
+    grid = (t // bt, f // bf, d // bd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda ti, fi, ki, g: (ti, ki)),
+            pl.BlockSpec((1, bd, bf), lambda ti, fi, ki, g: (g[ti], ki, fi)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda ti, fi, ki, g: (ti, fi)),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+    )
+    kern = functools.partial(_moe_kernel, n_kblocks=d // bd)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
+        interpret=interpret)(group_ids.astype(jnp.int32), x, w)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(idx: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, idx, axis=0)
+
+
+def gather_spmm_ref(cols: jax.Array, vals: jax.Array,
+                    dense: jax.Array) -> jax.Array:
+    """ELL SpMM oracle: out[m] = sum_j vals[m,j] * dense[cols[m,j]]."""
+    rows = jnp.take(dense, cols, axis=0).astype(jnp.float32)  # [M, J, N]
+    return jnp.einsum("mj,mjn->mn", vals.astype(jnp.float32), rows)
+
+
+def sparse_decode_attn_ref(idx: jax.Array, q: jax.Array, k: jax.Array,
+                           v: jax.Array, *, page_size: int = 8) -> jax.Array:
+    """TopK-page decode attention oracle.
+
+    idx [B,Hkv,P] pages; q [B,Hkv,G,D]; k/v [B,S,Hkv,D] -> [B,Hkv,G,D].
+    """
+    b, hkv, g, d = q.shape
+    _, s, _, _ = k.shape
+    kp = k.reshape(b, s // page_size, page_size, hkv, d)
+    vp = v.reshape(b, s // page_size, page_size, hkv, d)
+    # gather pages: [B, Hkv, P, page, D]
+    bi = jnp.arange(b)[:, None, None]
+    hi = jnp.arange(hkv)[None, :, None]
+    kg = kp[bi, idx, :, hi, :].astype(jnp.float32)
+    vg = vp[bi, idx, :, hi, :].astype(jnp.float32)
+    kg = kg.reshape(b, hkv, -1, d)
+    vg = vg.reshape(b, hkv, -1, d)
+    s_ = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32), kg) / (d ** 0.5)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bhgt,bhtd->bhgd", p, vg).astype(q.dtype)
+
+
+def moe_dispatch_matmul_ref(group_ids: jax.Array, x: jax.Array,
+                            w: jax.Array, *, block_t: int) -> jax.Array:
+    """Grouped GEMM oracle: out[tb] = x[tb] @ w[group_ids[tb]]."""
+    t, d = x.shape
+    xb = x.reshape(-1, block_t, d).astype(jnp.float32)       # [TB, bt, D]
+    wg = jnp.take(w, group_ids, axis=0).astype(jnp.float32)  # [TB, D, F]
+    out = jnp.einsum("btd,bdf->btf", xb, wg)
+    return out.reshape(t, -1).astype(x.dtype)

@@ -1,0 +1,440 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build ShapeDtypeStruct inputs, explicit in/out shardings,
+``jax.jit(step).lower(...).compile()``, and record:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits HBM)
+  * cost_analysis()    — per-device HLO FLOPs + bytes accessed
+  * collective bytes   — parsed from the compiled HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+
+Results go to benchmarks/results/dryrun/<cell>.json; the roofline report
+(repro.roofline) and EXPERIMENTS.md read from there.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import sharding
+from ..configs import ARCH_NAMES, SHAPES, get_config
+from ..models import api
+from ..optim import AdamWConfig
+from ..train import trainer
+from . import mesh as meshlib
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+_DTYPE_BITS = {"f64": 64, "f32": 32, "bf16": 16, "f16": 16, "s32": 32,
+               "u32": 32, "s16": 16, "u16": 16, "s8": 8, "u8": 8,
+               "pred": 8, "f8e4m3fn": 8, "f8e5m2": 8, "s64": 64, "u64": 64}
+
+_COLL_RE = re.compile(
+    r"= ([a-z0-9]+)\[([0-9,]*)\][^ ]* "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+# wire-byte multiplier per collective kind (ring algorithms, (n-1)/n ~ 1)
+_WIRE_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo: str) -> dict:
+    out = {k: 0.0 for k in _WIRE_MULT}
+    count = {k: 0 for k in _WIRE_MULT}
+    for m in _COLL_RE.finditer(hlo):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        bits = _DTYPE_BITS.get(dt, 32)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] += n * bits / 8
+        count[kind] += 1
+    wire = sum(_WIRE_MULT[k] * v for k, v in out.items())
+    return {"by_kind": out, "counts": count, "wire_bytes": wire}
+
+
+def make_mesh_for(name: str):
+    if name == "pod":
+        return meshlib.make_production_mesh(multi_pod=False)
+    if name == "multipod":
+        return meshlib.make_production_mesh(multi_pod=True)
+    raise ValueError(name)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# -- per-kind builders ----------------------------------------------------------
+
+def aux_configs(cfg):
+    """Reduced-depth unrolled configs for per-layer cost extrapolation.
+
+    XLA's cost model counts while-loop bodies once, so true totals are
+    linear-extrapolated: total(L) = x(1) + (units - 1) * (x(2) - x(1)).
+    """
+    import dataclasses
+    if cfg.family == "hybrid":
+        g = len(cfg.pattern)
+        c1 = dataclasses.replace(cfg, n_layers=g)
+        c2 = dataclasses.replace(cfg, n_layers=2 * g)
+        units = cfg.n_layers / g
+    elif cfg.family == "encdec":
+        c1 = dataclasses.replace(cfg, n_layers=1, n_enc_layers=1)
+        c2 = dataclasses.replace(cfg, n_layers=2, n_enc_layers=2)
+        units = cfg.n_layers
+    else:
+        c1 = dataclasses.replace(cfg, n_layers=1)
+        c2 = dataclasses.replace(cfg, n_layers=2)
+        units = cfg.n_layers
+    return c1, c2, units
+
+
+def train_policy(cfg, cell) -> dict:
+    """Memory policy for huge archs: bf16 second moment (>=100B params)
+    and microbatch gradient accumulation (see EXPERIMENTS.md §Perf).
+    Env overrides (hillclimbing knobs): REPRO_TRAIN_MICROBATCH,
+    REPRO_V_DTYPE."""
+    n = cfg.params_count()
+    v_dtype = os.environ.get(
+        "REPRO_V_DTYPE", "bfloat16" if n > 100e9 else "float32")
+    mb_env = os.environ.get("REPRO_TRAIN_MICROBATCH")
+    if mb_env is not None:
+        return {"v_dtype": v_dtype, "microbatch": int(mb_env)}
+    microbatch = 0
+    if n > 100e9:
+        microbatch = max(1, cell.global_batch // 2)
+    elif n > 30e9:
+        microbatch = max(1, cell.global_batch // 2)
+    return {"v_dtype": v_dtype, "microbatch": microbatch}
+
+
+def build_train(cfg, cell, mesh, unroll=False):
+    pol = train_policy(cfg, cell)
+    tc = trainer.TrainConfig(
+        remat=os.environ.get("REPRO_REMAT", "full"),
+        unroll=unroll, microbatch=pol["microbatch"],
+        opt=AdamWConfig(m_dtype="bfloat16", v_dtype=pol["v_dtype"]))
+    state_specs = jax.eval_shape(
+        functools.partial(trainer.init_state, cfg, tc),
+        jax.random.PRNGKey(0))
+    shardings = trainer.state_shardings(state_specs, mesh)
+    batch_specs = api.input_specs(cfg, cell)
+    bsh = trainer.batch_shardings(batch_specs, mesh)
+    step_fn = trainer.make_train_step(cfg, tc)
+    fn = jax.jit(step_fn,
+                 in_shardings=(shardings, bsh, None),
+                 out_shardings=(shardings, None),
+                 donate_argnums=(0,))
+    args = (state_specs, batch_specs,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args
+
+
+def build_prefill(cfg, cell, mesh, unroll=False):
+    pspecs = api.param_specs(cfg)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       sharding.tree_param_specs(pspecs, dict(mesh.shape)))
+    batch_specs = api.input_specs(cfg, cell)
+    bsh = trainer.batch_shardings(batch_specs, mesh)
+    csh = cache_shardings(cfg, cell, mesh,
+                          jax.eval_shape(
+                              functools.partial(_prefill_shape_fn, cfg),
+                              pspecs, batch_specs)[1])
+    logits_sh = _logits_sharding(cfg, cell, mesh)
+
+    def fn(params, batch):
+        return api.prefill_fn(cfg, params, batch, remat="full",
+                              unroll=unroll)
+
+    jfn = jax.jit(fn, in_shardings=(psh, bsh),
+                  out_shardings=(logits_sh, csh))
+    return jfn, (pspecs, batch_specs)
+
+
+def _prefill_shape_fn(cfg, params, batch):
+    return api.prefill_fn(cfg, params, batch, remat="none")
+
+
+def _logits_sharding(cfg, cell, mesh):
+    axes = dict(mesh.shape)
+    dp = dp_axes(mesh) if cell.global_batch > 1 else None
+    vocab = "model" if cfg.vocab % axes.get("model", 1) == 0 else None
+    return NamedSharding(mesh, P(dp, vocab))
+
+
+def decode_dist(cfg, cell, mesh):
+    """Distribution mode for the sparse decode path (see DESIGN.md §4 SP)."""
+    if cfg.family in ("ssm", "hybrid", "encdec") or not cfg.sparse_kv:
+        return None
+    axes = dict(mesh.shape)
+    model = axes.get("model", 1)
+    dp = dp_axes(mesh)
+    if cell.global_batch == 1:
+        seq = tuple(a for a in ("pod", "data", "model") if a in axes)
+        return {"mesh": mesh, "batch_axes": (), "seq_axes": seq,
+                "kv_axes": ()}
+    if cfg.n_kv_heads % model == 0:
+        # (§Perf iteration 3, refuted: dropping the shard_map boundary and
+        # letting GSPMD handle the batched gather replicates the cache —
+        # bytes/device 1.1e11 -> 1.1e12 on gemma decode_32k.  Keep the
+        # manual shard_map.)
+        return {"mesh": mesh, "batch_axes": dp, "seq_axes": (),
+                "kv_axes": ("model",)}
+    return {"mesh": mesh, "batch_axes": dp, "seq_axes": ("model",),
+            "kv_axes": ()}
+
+
+def cache_shardings(cfg, cell, mesh, cache_specs):
+    axes = dict(mesh.shape)
+    model = axes.get("model", 1)
+    dp = dp_axes(mesh) if cell.global_batch > 1 else None
+    seq_all = tuple(a for a in ("pod", "data", "model") if a in axes)
+    kv_div = cfg.n_kv_heads % model == 0
+
+    def spec_for(name: str, ndim: int) -> P:
+        if name == "pos":
+            return P()
+        if cfg.family == "ssm":
+            # [L,B,...]: batch on dp, last dim on model when divisible
+            s = [None] * ndim
+            if dp:
+                s[1] = dp
+            return P(*s)
+        if cfg.family == "hybrid":
+            s = [None] * ndim
+            if dp:
+                s[0 if name.startswith("tail_") else 1] = dp
+            return P(*s)
+        # transformer-family KV caches
+        if name in ("k", "v"):                    # [L,B,S,KV,D]
+            if cell.global_batch == 1:
+                return P(None, None, seq_all, None, None)
+            if kv_div:
+                return P(None, dp, None, "model", None)
+            return P(None, dp, "model", None, None)
+        if name == "kpage":                       # [L,B,NP,KV,D]
+            if cell.global_batch == 1:
+                return P(None, None, seq_all, None, None)
+            if kv_div:
+                return P(None, dp, None, "model", None)
+            return P(None, dp, "model", None, None)
+        if name in ("xk", "xv"):                  # [L,B,Ssrc,KV,D]
+            return P(None, dp, None, "model" if kv_div else None, None)
+        s = [None] * ndim
+        if dp and ndim >= 2:
+            s[1] = dp
+        return P(*s)
+
+    def walk(tree):
+        return {k: (NamedSharding(mesh, spec_for(k, v.ndim))
+                    if hasattr(v, "ndim") else walk(v))
+                for k, v in tree.items()}
+
+    return walk(cache_specs)
+
+
+def build_decode(cfg, cell, mesh, unroll=False):
+    kvd = os.environ.get("REPRO_KV_DTYPE")   # e.g. int8 (§Perf lever)
+    if kvd:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_dtype=kvd)
+    pspecs = api.param_specs(cfg)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       sharding.tree_param_specs(pspecs, dict(mesh.shape)))
+    b, s = cell.global_batch, cell.seq_len
+    params_for_cache = None
+    if cfg.family == "encdec":
+        params_for_cache = pspecs
+    cache_specs = jax.eval_shape(
+        functools.partial(api.init_cache, cfg, b, s,
+                          params=params_for_cache))
+    csh = cache_shardings(cfg, cell, mesh, cache_specs)
+    token_specs = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tsh = NamedSharding(mesh, P(dp_axes(mesh) if b > 1 else None))
+    dist = decode_dist(cfg, cell, mesh)
+    logits_sh = _logits_sharding(cfg, cell, mesh)
+    use_sparse = cfg.sparse_kv and cfg.family not in ("ssm", "hybrid",
+                                                      "encdec")
+    if os.environ.get("REPRO_DECODE_DENSE"):   # baseline-comparison knob
+        use_sparse = False
+        dist = None
+
+    def fn(params, cache, token):
+        return api.decode_fn(cfg, params, cache, token,
+                             sparse=use_sparse if cfg.family not in
+                             ("ssm", "hybrid") else None,
+                             dist=dist, unroll=unroll)
+
+    jfn = jax.jit(fn, in_shardings=(psh, csh, tsh),
+                  out_shardings=(logits_sh, csh), donate_argnums=(1,))
+    return jfn, (pspecs, cache_specs, token_specs)
+
+
+def _build(cfg, cell, mesh, unroll=False):
+    if cell.kind == "train":
+        return build_train(cfg, cell, mesh, unroll)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, cell, mesh, unroll)
+    return build_decode(cfg, cell, mesh, unroll)
+
+
+def inner_undercount(cfg, cell) -> float:
+    """Correction for inner loops longer than the 64-iteration unroll cap
+    (only mamba2's SSD chunk loop at 32k+ sequences exceeds it).  Applied
+    to the per-layer cost delta — an upper bound, since the non-SSD part
+    of the layer scales sub-linearly."""
+    if cfg.family != "ssm" or cell.kind == "decode":
+        return 1.0
+    n_chunks = max(1, cell.seq_len // cfg.ssm_chunk)
+    return max(1.0, n_chunks / 64.0)
+
+
+def _compile_cost(cfg, cell, mesh):
+    """(flops, hbm bytes, wire bytes, coll detail) with inner unrolling."""
+    from ..models import layers
+    layers.set_inner_unroll(True)
+    try:
+        fn, args = _build(cfg, cell, mesh, unroll=True)
+        compiled = fn.lower(*args).compile()
+    finally:
+        layers.set_inner_unroll(False)
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            coll["wire_bytes"], coll)
+
+
+def run_cell(arch: str, shape: str, mesh_name: str,
+             skip_cost: bool = False) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_mesh_for(mesh_name)
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        fn, args = _build(cfg, cell, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        # cost extrapolation from unrolled depth-1/2 compiles (XLA counts
+        # while bodies once; see aux_configs)
+        if skip_cost:
+            per_layer = None
+        else:
+            c1, c2, units = aux_configs(cfg)
+            f1, b1, w1, coll1 = _compile_cost(c1, cell, mesh)
+            f2, b2, w2, coll2 = _compile_cost(c2, cell, mesh)
+            per_layer = {
+                "flops": f2 - f1, "bytes": b2 - b1, "wire": w2 - w1,
+                "base_flops": f1, "units": units,
+            }
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = {k: float(getattr(ma, k, 0) or 0) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes")}
+    live = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+            + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"])
+    if per_layer is not None:
+        u = per_layer["units"]
+        corr = inner_undercount(cfg, cell)
+        flops_dev = (f1 + (u - 1) * (f2 - f1)) * corr
+        bytes_dev = (b1 + (u - 1) * (b2 - b1)) * corr
+        wire_dev = w1 + (u - 1) * (w2 - w1)
+        per_layer["inner_undercount_corr"] = corr
+    else:
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        wire_dev = coll["wire_bytes"]
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": n_chips,
+        "kind": cell.kind,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "wire_bytes_per_device": wire_dev,
+        "scan_body_flops_per_device": float(ca.get("flops", 0.0)),
+        "per_layer": per_layer,
+        "collectives": coll,
+        "memory": mem,
+        "live_bytes_per_device": live,
+        "fits_hbm": live <= meshlib.HBM_BYTES,
+        "model_flops_global": api.model_flops(cfg, cell),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    print(compiled.memory_analysis())
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+    return rec
+
+
+def cell_path(arch, shape, mesh_name):
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                     "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                path = cell_path(arch, shape, mesh_name)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {arch} x {shape} x {mesh_name}")
+                    continue
+                print(f"=== {arch} x {shape} x {mesh_name} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_name)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[ok] flops/dev={rec['flops_per_device']:.3e} "
+                          f"live={rec['live_bytes_per_device']/2**30:.2f}GiB "
+                          f"wire={rec['collectives']['wire_bytes']:.3e}B "
+                          f"({rec['compile_s']}s compile)", flush=True)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+A pod is a 16x16 (256-chip) slice with axes ("data", "model"); the
+multi-pod configuration adds a leading "pod" axis (2 x 16 x 16 = 512
+chips).  Exposed as a FUNCTION so importing this module never touches jax
+device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (host) devices exist — used by tests
+    and CPU examples."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# hardware constants (TPU v5e-class, per the assignment)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (one direction)
+VMEM_BYTES = 128 * 1024 * 1024
+HBM_BYTES = 16 * 1024 ** 3

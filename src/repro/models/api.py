@@ -1,0 +1,182 @@
+"""Uniform model API: one entry point per (family, step kind).
+
+Used by the trainer, server, dry-run, and tests.  ``input_specs`` returns
+ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation)
+for every model input of a given (arch, shape) cell; ``make_inputs``
+materialises small concrete batches for smoke tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeCell
+from . import encdec, hybrid, ssm, transformer, vlm
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    if cfg.family == "ssm":
+        return ssm.init_params(cfg, key)
+    if cfg.family == "hybrid":
+        return hybrid.init_params(cfg, key)
+    if cfg.family == "encdec":
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)   # dense | moe | vlm
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict, *, remat: str = "full",
+            unroll: bool = False):
+    if cfg.family == "ssm":
+        return ssm.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                           remat=remat, unroll=unroll)
+    if cfg.family == "hybrid":
+        return hybrid.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                              remat=remat, unroll=unroll)
+    if cfg.family == "encdec":
+        return encdec.loss_fn(params, cfg, batch["src_embeds"],
+                              batch["tokens"], batch["labels"], remat=remat,
+                              unroll=unroll)
+    if cfg.family == "vlm":
+        return vlm.loss_fn(params, cfg, batch["patches"], batch["tokens"],
+                           batch["labels"], remat=remat, unroll=unroll)
+    return transformer.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                               remat=remat, unroll=unroll)
+
+
+def prefill_fn(cfg: ArchConfig, params, batch: dict, *, remat: str = "full",
+               unroll: bool = False):
+    """Returns (last logits, cache)."""
+    if cfg.family == "ssm":
+        return ssm.prefill(params, cfg, batch["tokens"], remat=remat,
+                           unroll=unroll)
+    if cfg.family == "hybrid":
+        return hybrid.prefill(params, cfg, batch["tokens"], remat=remat,
+                              unroll=unroll)
+    if cfg.family == "encdec":
+        memory = encdec.encode(params, cfg, batch["src_embeds"], remat=remat,
+                               unroll=unroll)
+        hidden, kvs = encdec.decode_fwd(params, cfg, memory, batch["tokens"],
+                                        remat=remat, collect_kv=True,
+                                        unroll=unroll)
+        k, v = kvs
+        cache = encdec.init_cache(cfg, k.shape[1], k.shape[2], memory, params)
+        cache["k"], cache["v"] = k, v
+        cache["pos"] = jnp.asarray(k.shape[2], jnp.int32)
+        logits = jnp.einsum("bd,dv->bv", hidden[:, -1].astype(jnp.float32),
+                            params["embed"].T.astype(jnp.float32))
+        return logits, cache
+    if cfg.family == "vlm":
+        return vlm.prefill(params, cfg, batch["patches"], batch["tokens"],
+                           remat=remat, unroll=unroll)
+    return transformer.prefill(params, cfg, batch["tokens"], remat=remat,
+                               unroll=unroll)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, params=None):
+    if cfg.family == "ssm":
+        return ssm.init_cache(cfg, batch)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        memory = jnp.zeros((batch, cfg.src_len, cfg.d_model),
+                           jnp.dtype(cfg.param_dtype))
+        return encdec.init_cache(cfg, batch, max_len, memory, params)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def decode_fn(cfg: ArchConfig, params, cache, token, *, sparse=None,
+              dist=None, unroll: bool = False):
+    if cfg.family == "ssm":
+        return ssm.decode_step(params, cfg, cache, token, unroll=unroll)
+    if cfg.family == "hybrid":
+        return hybrid.decode_step(params, cfg, cache, token, unroll=unroll)
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cfg, cache, token, sparse=sparse,
+                                  unroll=unroll)
+    if cfg.family == "vlm":
+        return vlm.decode_step(params, cfg, cache, token, sparse=sparse,
+                               dist=dist, unroll=unroll)
+    return transformer.decode_step(params, cfg, cache, token, sparse=sparse,
+                                   dist=dist, unroll=unroll)
+
+
+# -- inputs --------------------------------------------------------------------
+
+def _train_shapes(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        return {"src_embeds": jax.ShapeDtypeStruct((b, cfg.src_len,
+                                                    cfg.d_model),
+                                                   jnp.bfloat16),
+                "tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        npatch = min(cfg.n_patches, s // 2)
+        text = s - npatch
+        t = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        return {"patches": jax.ShapeDtypeStruct((b, npatch, cfg.d_model),
+                                                jnp.bfloat16),
+                "tokens": t, "labels": t}
+    return {"tokens": tok, "labels": tok}
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the cell's entry point."""
+    if cell.kind == "train":
+        return _train_shapes(cfg, cell)
+    if cell.kind == "prefill":
+        specs = _train_shapes(cfg, cell)
+        specs.pop("labels")
+        return specs
+    # decode: one token + cache
+    b, s = cell.global_batch, cell.seq_len
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, params=param_specs_as_zeros(cfg)))
+    return {"token": token, "cache": cache}
+
+
+def param_specs_as_zeros(cfg: ArchConfig):
+    """For cache-spec evaluation paths that need params structurally."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        param_specs(cfg)) if cfg.family == "encdec" else None
+
+
+def make_inputs(cfg: ArchConfig, cell: ShapeCell, key) -> dict:
+    """Concrete small batches (smoke tests)."""
+    specs = _train_shapes(cfg, cell)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32:
+            key, k = jax.random.split(key)
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab)
+        else:
+            key, k = jax.random.split(key)
+            out[name] = (jax.random.normal(k, s.shape, jnp.float32) * 0.02
+                         ).astype(s.dtype)
+    if cell.kind != "train":
+        out.pop("labels", None)
+    return out
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N_active per generated token for
+    decode, 2·N_active·D for prefill."""
+    n_active = cfg.active_params_count()
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch  # one decode step

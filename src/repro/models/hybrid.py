@@ -1,0 +1,401 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved with local (sliding-window) MQA, pattern (rec, rec, attn).
+
+The temporal state is O(1) per token (diagonal LRU + bounded window), so
+long_500k decode runs natively — no KV TopK needed (DESIGN.md
+§Arch-applicability).  Layers are scanned per *group* of the pattern; the
+tail (n_layers % group) is applied unscanned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import layers
+
+Params = dict
+C_RGLRU = 8.0
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_rec_layer(cfg, key) -> Params:
+    dt = _dtype(cfg)
+    d, ru = cfg.d_model, cfg.rglru_dim or cfg.d_model
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_in": layers.dense_init(next(ks), (d, ru), dt),
+        "w_gate_branch": layers.dense_init(next(ks), (d, ru), dt),
+        "conv": layers.dense_init(next(ks), (cfg.conv_width, ru), dt, 0.5),
+        "w_rg_r": layers.dense_init(next(ks), (ru, ru), dt),
+        "w_rg_i": layers.dense_init(next(ks), (ru, ru), dt),
+        "lam": jnp.full((ru,), 3.0, jnp.float32),   # sigmoid(3) ~ .95 decay
+        "w_out": layers.dense_init(next(ks), (ru, d), dt),
+    }
+
+
+def init_mlp_params(cfg, key) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = iter(jax.random.split(key, 3))
+    return {
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wi": layers.dense_init(next(ks), (d, cfg.d_ff), dt),
+        "wg": layers.dense_init(next(ks), (d, cfg.d_ff), dt),
+        "wo_mlp": layers.dense_init(next(ks), (cfg.d_ff, d), dt),
+    }
+
+
+def init_attn_layer(cfg, key) -> Params:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    ks = iter(jax.random.split(key, 5))
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wq": layers.dense_init(next(ks), (d, cfg.n_heads * hd), dt),
+        "wk": layers.dense_init(next(ks), (d, cfg.n_kv_heads * hd), dt),
+        "wv": layers.dense_init(next(ks), (d, cfg.n_kv_heads * hd), dt),
+        "wo": layers.dense_init(next(ks), (cfg.n_heads * hd, d), dt),
+    }
+
+
+def init_group(cfg, key) -> Params:
+    """One pattern group: params for each sublayer + its MLP."""
+    p = {}
+    ks = jax.random.split(key, 2 * len(cfg.pattern))
+    for i, kind in enumerate(cfg.pattern):
+        init = init_rec_layer if kind == "rec" else init_attn_layer
+        p[f"sub{i}"] = init(cfg, ks[2 * i])
+        p[f"mlp{i}"] = init_mlp_params(cfg, ks[2 * i + 1])
+    return p
+
+
+def init_params(cfg, key) -> Params:
+    n_groups = cfg.n_layers // len(cfg.pattern)
+    n_tail = cfg.n_layers % len(cfg.pattern)
+    k_emb, k_g, k_t = jax.random.split(key, 3)
+    params = {
+        "embed": layers.dense_init(k_emb, (cfg.vocab, cfg.d_model),
+                                   _dtype(cfg), 0.02),
+        "groups": layers.stack_layer_params(
+            functools.partial(init_group, cfg), n_groups, k_g),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if n_tail:
+        tail = {}
+        kt = jax.random.split(k_t, n_tail * 2)
+        for i in range(n_tail):
+            kind = cfg.pattern[i]
+            init = init_rec_layer if kind == "rec" else init_attn_layer
+            tail[f"sub{i}"] = init(cfg, kt[2 * i])
+            tail[f"mlp{i}"] = init_mlp_params(cfg, kt[2 * i + 1])
+        params["tail"] = tail
+    return params
+
+
+def rglru(x: jax.Array, p: Params, h0=None):
+    """RG-LRU over [B,S,ru] via associative scan.  Returns (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", xf,
+                                  p["w_rg_r"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", xf,
+                                  p["w_rg_i"].astype(jnp.float32)))
+    log_a = C_RGLRU * r * jax.nn.log_sigmoid(p["lam"])      # [B,S,ru] (<0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def op(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rec_block(cfg, x, p, conv_state=None, h0=None, single_step=False):
+    """Griffin recurrent block: (conv -> RG-LRU) * gelu-gate -> out."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in"].astype(x.dtype))
+    g = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x,
+                               p["w_gate_branch"].astype(x.dtype)))
+    width = p["conv"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([conv_state, u], axis=1)
+    uc = sum(up[:, i:i + u.shape[1]] * p["conv"][i].astype(u.dtype)
+             for i in range(width))
+    new_conv = up[:, -(width - 1):]
+    y, h_last = rglru(uc, p, h0)
+    out = jnp.einsum("bsr,rd->bsd", y * g, p["w_out"].astype(x.dtype))
+    return out, new_conv, h_last
+
+
+def attn_block(cfg, x, p, pos_offset=0, kv_cache=None, pos=None):
+    """Local MQA block. With kv_cache (decode): window ring buffer."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype)).reshape(
+        b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype)).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype)).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    if kv_cache is None:
+        posv = pos_offset + jnp.arange(s)[None, :]
+        q = layers.apply_rope(q, posv, cfg.rope_theta)
+        k = layers.apply_rope(k, posv, cfg.rope_theta)
+        o = layers.chunked_attention(q, k, v, causal=True, window=cfg.window,
+                                     chunk=min(1024, s))
+        return jnp.einsum("bsh,hd->bsd", o.reshape(b, s, -1),
+                          p["wo"].astype(x.dtype)), None
+    kc, vc = kv_cache                     # [B, W, KV, D] ring buffers
+    w = kc.shape[1]
+    posv = jnp.full((1, 1), pos)
+    q = layers.apply_rope(q, posv, cfg.rope_theta)
+    k = layers.apply_rope(k, posv, cfg.rope_theta)
+    slot = pos % w
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+    # ring positions: absolute position of each slot
+    idxs = jnp.arange(w)
+    abs_pos = jnp.where(idxs <= slot, pos - slot + idxs,
+                        pos - slot + idxs - w)
+    valid = abs_pos >= 0
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, g, hd).astype(jnp.float32) / (hd ** 0.5)
+    sc = jnp.einsum("bkgd,bwkd->bkgw", qg, kc.astype(jnp.float32))
+    sc = jnp.where(valid[None, None, None, :], sc, -jnp.inf)
+    wgt = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", wgt, vc.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype)), (kc, vc)
+
+
+def _mlp(cfg, x, p):
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["wg"].astype(x.dtype)))
+    u = jnp.einsum("bsd,df->bsf", h, p["wi"].astype(x.dtype))
+    return x + jnp.einsum("bsf,fd->bsd", g * u, p["wo_mlp"].astype(x.dtype))
+
+
+def _group_fwd(cfg, x, gp, pos_offset=0):
+    for i, kind in enumerate(cfg.pattern):
+        sub, mp = gp[f"sub{i}"], gp[f"mlp{i}"]
+        h = layers.rms_norm(x, sub["ln"], cfg.norm_eps)
+        if kind == "rec":
+            y, _, _ = rec_block(cfg, h, sub)
+        else:
+            y, _ = attn_block(cfg, h, sub, pos_offset)
+        x = x + y
+        x = _mlp(cfg, x, mp)
+    return x
+
+
+def forward(params, cfg, tokens, *, remat: str = "full",
+            unroll: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    x = sharding.constrain(x, "batch", None, None)
+
+    def body(carry, gp):
+        return _group_fwd(cfg, carry, gp), None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = layers.scan_layers(body, x, params["groups"], unroll)
+    if "tail" in params:
+        n_tail = cfg.n_layers % len(cfg.pattern)
+        for i in range(n_tail):
+            sub, mp = params["tail"][f"sub{i}"], params["tail"][f"mlp{i}"]
+            h = layers.rms_norm(x, sub["ln"], cfg.norm_eps)
+            if cfg.pattern[i] == "rec":
+                y, _, _ = rec_block(cfg, h, sub)
+            else:
+                y, _ = attn_block(cfg, h, sub)
+            x = x + y
+            x = _mlp(cfg, x, mp)
+    return layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg, tokens, labels, *, remat: str = "full",
+            unroll: bool = False):
+    hidden = forward(params, cfg, tokens, remat=remat, unroll=unroll)
+    return layers.chunked_xent(hidden, params["embed"].T, labels)
+
+
+def _ring_from_tail(cfg, k, v, w: int):
+    """Scatter the last ``w`` tokens of [B,S,KV,D] into ring-buffer slots
+    so slot i holds the token whose absolute position % w == i."""
+    b, s, kv, d = k.shape
+    take = min(w, s)
+    pos = jnp.arange(s - take, s)
+    slots = pos % w
+    kc = jnp.zeros((b, w, kv, d), k.dtype).at[:, slots].set(k[:, -take:])
+    vc = jnp.zeros((b, w, kv, d), v.dtype).at[:, slots].set(v[:, -take:])
+    return kc, vc
+
+
+def prefill(params, cfg, tokens, *, remat: str = "full",
+            unroll: bool = False):
+    """Forward over the prompt collecting recurrent states + window KV;
+    returns (last-token logits, cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    x = sharding.constrain(x, "batch", None, None)
+    s = tokens.shape[1]
+    w = cfg.window
+
+    def body(carry, gp):
+        xc = carry
+        states = {}
+        for i, kind in enumerate(cfg.pattern):
+            sub, mp = gp[f"sub{i}"], gp[f"mlp{i}"]
+            h = layers.rms_norm(xc, sub["ln"], cfg.norm_eps)
+            if kind == "rec":
+                y, conv2, h2 = rec_block(cfg, h, sub)
+                states[f"conv{i}"] = conv2
+                states[f"h{i}"] = h2
+            else:
+                b, sl, _ = h.shape
+                hd = cfg.hd
+                q = jnp.einsum("bsd,dh->bsh", h, sub["wq"].astype(h.dtype)
+                               ).reshape(b, sl, cfg.n_heads, hd)
+                k = jnp.einsum("bsd,dh->bsh", h, sub["wk"].astype(h.dtype)
+                               ).reshape(b, sl, cfg.n_kv_heads, hd)
+                v = jnp.einsum("bsd,dh->bsh", h, sub["wv"].astype(h.dtype)
+                               ).reshape(b, sl, cfg.n_kv_heads, hd)
+                posv = jnp.arange(sl)[None, :]
+                qr = layers.apply_rope(q, posv, cfg.rope_theta)
+                kr = layers.apply_rope(k, posv, cfg.rope_theta)
+                o = layers.chunked_attention(qr, kr, v, causal=True,
+                                             window=w, chunk=min(1024, sl))
+                y = jnp.einsum("bsh,hd->bsd", o.reshape(b, sl, -1),
+                               sub["wo"].astype(h.dtype))
+                states[f"k{i}"], states[f"v{i}"] = _ring_from_tail(
+                    cfg, kr, v, min(w, s))
+            xc = xc + y
+            xc = _mlp(cfg, xc, mp)
+        return xc, states
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = layers.scan_layers(body, x, params["groups"], unroll)
+    cache = dict(states)
+    if "tail" in params:
+        n_tail = cfg.n_layers % len(cfg.pattern)
+        for i in range(n_tail):
+            sub, mp = params["tail"][f"sub{i}"], params["tail"][f"mlp{i}"]
+            h = layers.rms_norm(x, sub["ln"], cfg.norm_eps)
+            y, conv2, h2 = rec_block(cfg, h, sub)   # pattern prefix = rec
+            cache[f"tail_conv{i}"] = conv2
+            cache[f"tail_h{i}"] = h2
+            x = x + y
+            x = _mlp(cfg, x, mp)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def init_cache(cfg, batch: int, max_len: int = 0) -> dict:
+    """Per-group states: conv [G,B,W-1,ru], lru h [G,B,ru] per rec sublayer;
+    ring KV [G,B,window,KV,D] per attn sublayer."""
+    n_groups = cfg.n_layers // len(cfg.pattern)
+    n_tail = cfg.n_layers % len(cfg.pattern)
+    ru = cfg.rglru_dim or cfg.d_model
+    dt = _dtype(cfg)
+    w = min(cfg.window, max_len) if max_len else cfg.window
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == "rec":
+            cache[f"conv{i}"] = jnp.zeros(
+                (n_groups, batch, cfg.conv_width - 1, ru), dt)
+            cache[f"h{i}"] = jnp.zeros((n_groups, batch, ru), jnp.float32)
+        else:
+            cache[f"k{i}"] = jnp.zeros((n_groups, batch, w, cfg.n_kv_heads,
+                                        cfg.hd), dt)
+            cache[f"v{i}"] = jnp.zeros((n_groups, batch, w, cfg.n_kv_heads,
+                                        cfg.hd), dt)
+    for i in range(n_tail):
+        if cfg.pattern[i] == "rec":
+            cache[f"tail_conv{i}"] = jnp.zeros(
+                (batch, cfg.conv_width - 1, ru), dt)
+            cache[f"tail_h{i}"] = jnp.zeros((batch, ru), jnp.float32)
+        else:
+            cache[f"tail_k{i}"] = jnp.zeros((batch, w, cfg.n_kv_heads,
+                                             cfg.hd), dt)
+            cache[f"tail_v{i}"] = jnp.zeros((batch, w, cfg.n_kv_heads,
+                                             cfg.hd), dt)
+    return cache
+
+
+def decode_step(params, cfg, cache, token, *, unroll: bool = False):
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(_dtype(cfg))
+    pos = cache["pos"]
+
+    def body(carry, inp):
+        xc = carry
+        gp = inp["gp"]
+        new_states = {}
+        for i, kind in enumerate(cfg.pattern):
+            sub, mp = gp[f"sub{i}"], gp[f"mlp{i}"]
+            h = layers.rms_norm(xc, sub["ln"], cfg.norm_eps)
+            if kind == "rec":
+                y, conv2, h2 = rec_block(cfg, h, sub,
+                                         conv_state=inp[f"conv{i}"],
+                                         h0=inp[f"h{i}"], single_step=True)
+                new_states[f"conv{i}"] = conv2
+                new_states[f"h{i}"] = h2
+            else:
+                y, (k2, v2) = attn_block(cfg, h, sub,
+                                         kv_cache=(inp[f"k{i}"], inp[f"v{i}"]),
+                                         pos=pos)
+                new_states[f"k{i}"] = k2
+                new_states[f"v{i}"] = v2
+            xc = xc + y
+            xc = _mlp(cfg, xc, mp)
+        return xc, new_states
+
+    xs = {"gp": params["groups"]}
+    for key in cache:
+        if key != "pos" and not key.startswith("tail_"):
+            xs[key] = cache[key]
+    x, new_states = layers.scan_layers(body, x, xs, unroll)
+    new_cache = dict(new_states)
+    # tail (unscanned) sublayers
+    if "tail" in params:
+        n_tail = cfg.n_layers % len(cfg.pattern)
+        for i in range(n_tail):
+            sub, mp = params["tail"][f"sub{i}"], params["tail"][f"mlp{i}"]
+            h = layers.rms_norm(x, sub["ln"], cfg.norm_eps)
+            if cfg.pattern[i] == "rec":
+                y, conv2, h2 = rec_block(cfg, h, sub,
+                                         conv_state=cache[f"tail_conv{i}"],
+                                         h0=cache[f"tail_h{i}"],
+                                         single_step=True)
+                new_cache[f"tail_conv{i}"] = conv2
+                new_cache[f"tail_h{i}"] = h2
+            else:
+                y, (k2, v2) = attn_block(
+                    cfg, h, sub,
+                    kv_cache=(cache[f"tail_k{i}"], cache[f"tail_v{i}"]),
+                    pos=pos)
+                new_cache[f"tail_k{i}"] = k2
+                new_cache[f"tail_v{i}"] = v2
+            x = x + y
+            x = _mlp(cfg, x, mp)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

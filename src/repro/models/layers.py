@@ -1,0 +1,267 @@
+"""Shared model layers: norms, rotary (RoPE / M-RoPE), GQA attention with
+memory-efficient chunked (flash-style) softmax, gated MLPs.
+
+Everything is a pure function over a params dict; layer stacks are scanned
+(``jax.lax.scan``) with parameters stacked on a leading layer axis, which
+keeps HLO size and compile time O(1) in depth — essential for the 512-chip
+dry-run of 80-94-layer models.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = dict
+
+# When True, inner lax.scan loops (attention KV chunks, SSD chunks, loss
+# chunks) are traced as Python loops.  ONLY used by the dry-run cost
+# analysis: XLA's HLO cost model counts while-loop bodies once regardless
+# of trip count, so unrolled tracing is required for true FLOP/byte counts.
+_INNER_UNROLL = False
+
+
+def set_inner_unroll(flag: bool) -> None:
+    global _INNER_UNROLL
+    _INNER_UNROLL = flag
+
+
+def inner_scan(body, carry, xs_list, length: int):
+    """lax.scan respecting the dry-run inner-unroll flag.
+
+    xs_list: tuple of arrays with leading ``length`` axis.  The unrolled
+    form uses ``lax.scan(unroll=k)``: the body is traced once and XLA
+    replicates it, so cost analysis counts k iterations without the
+    O(length) Python retracing a manual loop would pay.  k is capped at
+    64 (XLA:CPU compile time of a 512-copy SSD body is pathological);
+    loops longer than the cap are undercounted by length/64 and the
+    dry-run applies a documented family-level correction
+    (``launch/dryrun.py::inner_undercount``)."""
+    if not _INNER_UNROLL:
+        return jax.lax.scan(body, carry, xs_list)
+    return jax.lax.scan(body, carry, xs_list,
+                        unroll=min(int(length), 64))
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * (1.0 + w.astype(x.dtype))
+
+
+# -- rotary ------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x [..., S, H, D]; pos [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [D/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    ang = ang[..., None, :]                           # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, sections: tuple[int, int, int],
+                theta: float = 1000000.0) -> jax.Array:
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x [B, S, H, D]; pos3 [3, B, S]; sections sum to D//2.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # [D/2]
+    ang_all = pos3[..., None].astype(jnp.float32) * freqs          # [3,B,S,D/2]
+    sec = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32)
+        for i, s in enumerate(sections)])                          # [D/2]
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), sec[None, None, :, None], axis=-1
+    )[..., 0]                                                      # [B,S,D/2]
+    ang = ang[..., None, :]                                        # [B,S,1,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention ----------------------------------------------------------------
+
+def _deq(x: jax.Array) -> jax.Array:
+    """f32 view of (possibly int8-quantised) KV values."""
+    if x.dtype == jnp.int8:
+        from .sparse_attention import KV_QSCALE
+        return x.astype(jnp.float32) * (1.0 / KV_QSCALE)
+    return x.astype(jnp.float32)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, q_offset: int = 0,
+                      window: int = 0, chunk: int = 1024,
+                      logit_softcap: float = 0.0) -> jax.Array:
+    """Flash-style GQA attention, scanned over KV chunks (O(S) memory).
+
+    q [B, Sq, H, D]; k, v [B, Sk, KV, D]; H = KV * G.
+    ``q_offset``: absolute position of q[0] (for decode / chunked prefill).
+    ``window > 0``: local (sliding-window) attention.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    qf = q.astype(jnp.float32) / (d ** 0.5)         # [B,Sq,H,D], H TP-sharded
+    n_chunks = max(1, -(-sk // chunk))
+    while sk % n_chunks:                             # sk need not divide chunk
+        n_chunks += 1
+    ck = sk // n_chunks
+    kc = k.reshape(b, n_chunks, ck, kv, d)
+    vc = v.reshape(b, n_chunks, ck, kv, d)
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c0 = inp
+        # broadcast KV group to flat heads per chunk (keeps the head dim
+        # flat so TP sharding on H survives — no (kv, g) reshape)
+        kh = jnp.broadcast_to(kb[:, :, :, None, :], (b, ck, kv, g, d)
+                              ).reshape(b, ck, h, d)
+        vh = jnp.broadcast_to(vb[:, :, :, None, :], (b, ck, kv, g, d)
+                              ).reshape(b, ck, h, d)
+        s = jnp.einsum("bqhd,bthd->bqht", qf, _deq(kh))
+        if logit_softcap:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
+        kpos = c0 + jnp.arange(ck)
+        mask = jnp.ones((sq, ck), dtype=bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqht,bthd->bqhd", p, _deq(vh))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, sq, h), dtype=jnp.float32)
+    a0 = jnp.zeros((b, sq, h, d), dtype=jnp.float32)
+    chunk_starts = jnp.arange(n_chunks) * ck
+    # flash-style backward: recompute per-chunk scores instead of letting
+    # the scan stack them ([n_chunks, B, Sq, H, ck] f32 otherwise)
+    (m, l, acc), _ = inner_scan(
+        jax.checkpoint(body), (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), chunk_starts),
+        n_chunks)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def gqa_project(x: jax.Array, p: Params, cfg: Any) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """QKV projection with optional bias; returns [B,S,H,D], [B,S,KV,D] x2."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attn_out(o: jax.Array, p: Params, d_model: int) -> jax.Array:
+    b, s, h, hd = o.shape
+    return jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * hd),
+                      p["wo"].astype(o.dtype))
+
+
+def mlp(x: jax.Array, p: Params, act: str) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if act in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        gate = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        up = gate * up
+    elif act == "gelu":
+        up = jax.nn.gelu(up)
+    elif act == "relu":
+        up = jax.nn.relu(up)
+    return jnp.einsum("bsf,fd->bsd", up, p["wo"].astype(x.dtype))
+
+
+def chunked_xent(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                 chunk: int = 1024) -> jax.Array:
+    """Mean token cross-entropy computed in S-chunks: the [B,S,V] logits
+    tensor never materialises (V stays TP-sharded, bf16 matmul, f32 LSE)."""
+    from .. import sharding
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    n = s // c
+    hc = hidden.reshape(b, n, c, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n, c).swapaxes(0, 1)
+    headb = head.astype(jnp.bfloat16)
+
+    def chunk_loss(carry, inp):
+        h, l = inp
+        logits = jnp.einsum("bcd,dv->bcv", h.astype(jnp.bfloat16),
+                            headb).astype(jnp.float32)
+        logits = sharding.constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = inner_scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, lc), n)
+    return total / (b * s)
+
+
+# -- init helpers --------------------------------------------------------------
+
+def scan_layers(body, x, stacked, unroll: bool = False):
+    """``jax.lax.scan`` over stacked layer params, or a Python unroll.
+
+    The unrolled form exists for the dry-run cost analysis: XLA's HLO cost
+    model counts a while-loop body ONCE regardless of trip count, so the
+    roofline extrapolates per-layer cost from unrolled depth-1/depth-2
+    compiles while memory analysis uses the scanned (production) form.
+    """
+    if not unroll:
+        return jax.lax.scan(body, x, stacked)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        x, y = body(x, lp)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def stack_layer_params(init_one, n_layers: int, key) -> Params:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)

@@ -1,0 +1,238 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), chunked scan.
+
+Attention-free mixer: the paper's sparse-KV technique is inapplicable here
+(DESIGN.md §Arch-applicability); runahead still applies to the embedding
+gather.  The SSD recurrence is computed with the chunked algorithm: O(c²)
+intra-chunk (MXU-friendly einsums) + inter-chunk state carry, scanned over
+chunks, so HLO stays small and decode is an O(1) state update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import layers
+
+Params = dict
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_layer(cfg, key) -> Params:
+    dt = _dtype(cfg)
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    w = cfg.conv_width
+    ks = iter(jax.random.split(key, 10))
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wz": layers.dense_init(next(ks), (d, di), dt),
+        "wx": layers.dense_init(next(ks), (d, di), dt),
+        "wB": layers.dense_init(next(ks), (d, ds), dt),
+        "wC": layers.dense_init(next(ks), (d, ds), dt),
+        "wdt": layers.dense_init(next(ks), (d, nh), dt),
+        "conv_x": layers.dense_init(next(ks), (w, di), dt, 0.5),
+        "conv_B": layers.dense_init(next(ks), (w, ds), dt, 0.5),
+        "conv_C": layers.dense_init(next(ks), (w, ds), dt, 0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ln_gate": jnp.zeros((di,), jnp.float32),
+        "wout": layers.dense_init(next(ks), (di, d), dt),
+    }
+
+
+def init_params(cfg, key) -> Params:
+    k_emb, k_layers = jax.random.split(key)
+    return {
+        "embed": layers.dense_init(k_emb, (cfg.vocab, cfg.d_model),
+                                   _dtype(cfg), 0.02),
+        "layers": layers.stack_layer_params(
+            functools.partial(init_layer, cfg), cfg.n_layers, k_layers),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv over S. x [B,S,C], w [W,C].  Returns (y, new
+    state [B,W-1,C])."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(y), xp[:, -(width - 1):]
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, state=None):
+    """Chunked SSD. xh [B,S,nh,hd]; dt [B,S,nh]; A [nh]; Bm/Cm [B,S,ds].
+
+    Returns (y [B,S,nh,hd], final state [B,nh,hd,ds]).
+    """
+    b, s, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    n = max(1, -(-s // chunk))
+    while s % n:                       # s need not divide the chunk size
+        n += 1
+    c = s // n
+    xc = xh.reshape(b, n, c, nh, hd)
+    dtc = dt.reshape(b, n, c, nh)
+    bc = Bm.reshape(b, n, c, ds)
+    cc = Cm.reshape(b, n, c, ds)
+    if state is None:
+        state = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def body_clean(h, inp):
+        x_, dt_, b_, c_ = inp
+        la = jnp.cumsum(dt_ * A, axis=1)
+        scores = jnp.einsum("btn,bsn->bts", c_, b_)
+        dmat = la[:, :, None, :] - la[:, None, :, :]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(dmat), 0.0)
+        w = scores[..., None] * decay * dt_[:, None, :, :]
+        y_intra = jnp.einsum("btsn,bsnp->btnp", w, x_)
+        y_inter = jnp.einsum("bts,bnps,btn->btnp", c_, h, jnp.exp(la))
+        y = y_intra + y_inter
+        tail = la[:, -1:, :] - la
+        contrib = jnp.einsum("btn,btnp,bts->bnps", dt_ * jnp.exp(tail), x_, b_)
+        h_new = h * jnp.exp(la[:, -1])[:, :, None, None] + contrib
+        return h_new, y
+
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dtc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cc, 1, 0).astype(jnp.float32))
+    if layers._INNER_UNROLL:
+        state, ys = jax.lax.scan(body_clean, state, xs,
+                                 unroll=min(n, 64))
+    else:
+        state, ys = jax.lax.scan(body_clean, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hd)
+    return y, state
+
+
+def mixer(cfg, x, p, conv_state=None, ssm_state=None, single_step=False):
+    """Mamba2 mixer on [B,S,d].  Returns (y, conv_states, ssm_state)."""
+    nh, hd, ds = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    bm = jnp.einsum("bsd,de->bse", x, p["wB"].astype(x.dtype))
+    cm = jnp.einsum("bsd,de->bse", x, p["wC"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32),
+                    p["wdt"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    cs = conv_state or {}
+    xi, cs_x = _causal_conv(xi, p["conv_x"].astype(x.dtype), cs.get("x"))
+    bm, cs_b = _causal_conv(bm, p["conv_B"].astype(x.dtype), cs.get("B"))
+    cm, cs_c = _causal_conv(cm, p["conv_C"].astype(x.dtype), cs.get("C"))
+    xh = xi.reshape(*xi.shape[:2], nh, hd)
+    A = -jnp.exp(p["A_log"])
+    if single_step:
+        # O(1) decode: h = exp(dt*A) h + dt * x B^T ; y = C h + D x
+        a = jnp.exp(dt[:, 0] * A)                               # [B,nh]
+        contrib = jnp.einsum("bn,bnp,bs->bnps", dt[:, 0],
+                             xh[:, 0].astype(jnp.float32),
+                             bm[:, 0].astype(jnp.float32))
+        h_new = ssm_state * a[:, :, None, None] + contrib
+        y = jnp.einsum("bs,bnps->bnp", cm[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]
+        ssm_state = h_new
+    else:
+        y, ssm_state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                   bm.astype(jnp.float32),
+                                   cm.astype(jnp.float32),
+                                   cfg.ssm_chunk, ssm_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], -1).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["ln_gate"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wout"].astype(x.dtype))
+    return out, {"x": cs_x, "B": cs_b, "C": cs_c}, ssm_state
+
+
+def forward(params, cfg, tokens, *, remat: str = "full",
+            unroll: bool = False):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    x = sharding.constrain(x, "batch", None, None)
+
+    def body(carry, lp):
+        h = layers.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        y, _, _ = mixer(cfg, h, lp)
+        return carry + y, None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = layers.scan_layers(body, x, params["layers"], unroll)
+    return layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg, tokens, labels, *, remat: str = "full",
+            unroll: bool = False):
+    hidden = forward(params, cfg, tokens, remat=remat, unroll=unroll)
+    return layers.chunked_xent(hidden, params["embed"].T, labels)
+
+
+def prefill(params, cfg, tokens, *, remat: str = "full",
+            unroll: bool = False):
+    """Forward over the prompt collecting per-layer final states; returns
+    (last-token logits, cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    x = sharding.constrain(x, "batch", None, None)
+
+    def body(carry, lp):
+        h = layers.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        y, cs, ssm_state = mixer(cfg, h, lp)
+        return carry + y, (cs["x"], cs["B"], cs["C"], ssm_state)
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, (cx, cb, cc, ssm_states) = layers.scan_layers(
+        body, x, params["layers"], unroll)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    cache = {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": ssm_states,
+             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg, batch: int, max_len: int = 0) -> dict:
+    nh, hd, ds, di = (cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                      cfg.d_inner)
+    w = cfg.conv_width
+    l = cfg.n_layers
+    dt = _dtype(cfg)
+    return {
+        "conv_x": jnp.zeros((l, batch, w - 1, di), dt),
+        "conv_B": jnp.zeros((l, batch, w - 1, ds), dt),
+        "conv_C": jnp.zeros((l, batch, w - 1, ds), dt),
+        "ssm": jnp.zeros((l, batch, nh, hd, ds), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, cache, token, *, unroll: bool = False):
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(_dtype(cfg))
+
+    def body(carry, inp):
+        lp, cx, cb, cc, ssm = inp
+        h = layers.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        y, cs, ssm2 = mixer(cfg, h, lp,
+                            conv_state={"x": cx, "B": cb, "C": cc},
+                            ssm_state=ssm, single_step=True)
+        return carry + y, (cs["x"], cs["B"], cs["C"], ssm2)
+
+    x, (cx, cb, cc, ssm) = layers.scan_layers(
+        body, x, (params["layers"], cache["conv_x"], cache["conv_B"],
+                  cache["conv_C"], cache["ssm"]), unroll)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    return logits, {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": ssm,
+                    "pos": cache["pos"] + 1}

@@ -1,0 +1,305 @@
+"""Dense decoder-only transformer (tinyllama / llama3.2 / gemma / qwen2 /
+qwen2-vl backbone) + MoE variants (grok-1 / qwen3-moe) — scan-stacked.
+
+Provides: init_params, forward (train/prefill), loss_fn (chunked vocab xent),
+init_cache, decode_step (dense or TopK-sparse KV — the paper's technique).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import layers, moe, sparse_attention
+
+Params = dict
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_layer(cfg, key) -> Params:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    ks = iter(jax.random.split(key, 12))
+    p = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wq": layers.dense_init(next(ks), (d, cfg.n_heads * hd), dt),
+        "wk": layers.dense_init(next(ks), (d, cfg.n_kv_heads * hd), dt),
+        "wv": layers.dense_init(next(ks), (d, cfg.n_kv_heads * hd), dt),
+        "wo": layers.dense_init(next(ks), (cfg.n_heads * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    if cfg.n_experts:
+        p.update(moe.init_moe(cfg, next(ks), dt))
+    else:
+        p["wi"] = layers.dense_init(next(ks), (d, cfg.d_ff), dt)
+        if cfg.act in ("swiglu", "geglu"):
+            p["wg"] = layers.dense_init(next(ks), (d, cfg.d_ff), dt)
+        p["wo_mlp"] = layers.dense_init(next(ks), (cfg.d_ff, d), dt)
+    return p
+
+
+def init_params(cfg, key) -> Params:
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": layers.dense_init(k_emb, (cfg.vocab, cfg.d_model), dt, 0.02),
+        "layers": layers.stack_layer_params(
+            functools.partial(init_layer, cfg), cfg.n_layers, k_layers),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), dt)
+    return params
+
+
+def _ffn(x, p, cfg):
+    if cfg.n_experts:
+        return moe.moe_ffn(x, p, cfg)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        g = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = g * h
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    h = sharding.constrain(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo_mlp"].astype(x.dtype))
+
+
+def _rope(cfg, x, pos, pos3=None):
+    if cfg.mrope_sections:
+        return layers.apply_mrope(x, pos3, cfg.mrope_sections, cfg.rope_theta)
+    return layers.apply_rope(x, pos, cfg.rope_theta)
+
+
+def layer_fwd(cfg, x, p, pos, pos3=None, collect_kv=False):
+    """One decoder layer on [B,S,D]; returns (x, (k, v) | None)."""
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = layers.gqa_project(h, p, cfg)
+    q = _rope(cfg, q, pos, pos3)
+    k = _rope(cfg, k, pos, pos3)
+    q = sharding.constrain(q, "batch", None, "heads", None)
+    k = sharding.constrain(k, "batch", None, "kv_heads", None)
+    o = layers.chunked_attention(q, k, v, causal=True,
+                                 logit_softcap=cfg.logit_softcap)
+    x = x + layers.attn_out(o, p, cfg.d_model)
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _ffn(h2, p, cfg)
+    # sequence parallelism: the residual stream (and hence the scan-saved
+    # per-layer residual stack) lives S-sharded on "model"; GSPMD inserts
+    # the all-gather before attention/MLP and the reduce-scatter after
+    x = sharding.constrain(x, "batch", "seq_sp", None)
+    return x, ((k, v) if collect_kv else None)
+
+
+def forward(params: Params, cfg, tokens=None, *, input_embeds=None,
+            pos3=None, collect_kv: bool = False, remat: str = "full",
+            unroll: bool = False):
+    """Run the stack; returns (hidden [B,S,D], kv | None)."""
+    if input_embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+        if getattr(cfg, "scale_embed", False):
+            x = x * (cfg.d_model ** 0.5)
+    else:
+        x = input_embeds.astype(_dtype(cfg))
+    x = sharding.constrain(x, "batch", None, None)
+    b, s, _ = x.shape
+    pos = jnp.arange(s)[None, :]
+
+    def body(carry, lp):
+        y, kv = layer_fwd(cfg, carry, lp, pos, pos3, collect_kv)
+        return y, kv
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    x, kvs = layers.scan_layers(body, x, params["layers"], unroll)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, kvs
+
+
+def logits_last(params, cfg, hidden):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bd,dv->bv", hidden[:, -1].astype(jnp.float32),
+                      head.astype(jnp.float32))
+
+
+def loss_fn(params: Params, cfg, tokens, labels, *, remat: str = "full",
+            loss_chunk: int = 1024, unroll: bool = False):
+    """Mean token cross-entropy, computed in S-chunks so the full [B,S,V]
+    logits tensor never materialises (vocab stays TP-sharded)."""
+    hidden, _ = forward(params, cfg, tokens, remat=remat, unroll=unroll)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return layers.chunked_xent(hidden, head, labels, loss_chunk)
+
+
+def prefill(params: Params, cfg, tokens, *, input_embeds=None, pos3=None,
+            remat: str = "full", unroll: bool = False):
+    """Forward pass that also returns the stacked KV cache (inference
+    prefill).  Returns (last-token logits [B,V], cache)."""
+    hidden, kvs = forward(params, cfg, tokens, input_embeds=input_embeds,
+                          pos3=pos3, collect_kv=True, remat=remat,
+                          unroll=unroll)
+    k, v = kvs
+    b = hidden.shape[0]
+    s = k.shape[2]
+    cache = make_cache(cfg, k, v, s)
+    return logits_last(params, cfg, hidden), cache
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or (jnp.int8 if cfg.kv_dtype == "int8" else _dtype(cfg))
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (cfg.n_layers, batch, max_len, kv, hd)
+    cache = {
+        "k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.sparse_kv:
+        np_ = max_len // cfg.kv_page
+        cache["kpage"] = jnp.zeros((cfg.n_layers, batch, np_, kv, hd),
+                                   jnp.float32)
+    return cache
+
+
+def make_cache(cfg, k, v, pos) -> dict:
+    """Build a cache dict from prefill KV [L,B,S,KV,D] (page summaries
+    derived by pooling; KV optionally int8-quantised)."""
+    kq = sparse_attention.kv_quant(k, jnp.int8) \
+        if cfg.kv_dtype == "int8" else k
+    vq = sparse_attention.kv_quant(v, jnp.int8) \
+        if cfg.kv_dtype == "int8" else v
+    cache = {"k": kq, "v": vq, "pos": jnp.asarray(pos, jnp.int32)}
+    if cfg.sparse_kv:
+        l, b, s, kv, hd = k.shape
+        pg = cfg.kv_page
+        cache["kpage"] = k.reshape(l, b, s // pg, pg, kv, hd).astype(
+            jnp.float32).mean(axis=3)
+    return cache
+
+
+def decode_step(params: Params, cfg, cache: dict, token, *, pos3=None,
+                sparse: bool | None = None, dist: dict | None = None,
+                unroll: bool = False):
+    """One decode step: token [B] -> (logits [B,V], cache).
+
+    ``dist``: optional {"mesh", "batch_axes", "seq_axes", "kv_axes"} for
+    the distributed sparse path (shard_map)."""
+    use_sparse = cfg.sparse_kv if sparse is None else sparse
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(_dtype(cfg))
+    if getattr(cfg, "scale_embed", False):
+        x = x * (cfg.d_model ** 0.5)
+    pos = cache["pos"]
+    b = x.shape[0]
+    max_len = cache["k"].shape[2]
+    pos_arr = jnp.full((1, 1), pos)
+
+    def _pin(arr, dims_spec):
+        # keep the carried caches on their intended sharding through the
+        # dynamic updates (GSPMD otherwise drifts to replication —
+        # measured as a full-cache all-gather per layer)
+        if dist is None:
+            return arr
+        from jax.sharding import PartitionSpec as P
+        ax = jax.sharding.get_abstract_mesh()
+        if ax is None or not ax.shape:
+            return arr
+        return jax.lax.with_sharding_constraint(arr, P(*dims_spec))
+
+    def _axes(name):
+        if not dist:
+            return None
+        v = tuple(a for a in dist.get(name, ())
+                  if a in dist["mesh"].shape)
+        return v or None
+
+    ba, sa, ka = _axes("batch_axes"), _axes("seq_axes"), _axes("kv_axes")
+
+    def body(carry, lp_and_idx):
+        # the full caches ride in the CARRY: XLA aliases the donated
+        # buffers through the while loop (one copy), and the sparse path
+        # gathers pages straight from the stacked cache with the layer
+        # index folded into the gather — per-layer slice/moveaxis copies
+        # would cost O(cache) HBM traffic per step (§Perf iteration 1)
+        xc, kfull, vfull, kpfull = carry
+        lp, li = lp_and_idx
+        h = layers.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = layers.gqa_project(h, lp, cfg)
+        if cfg.mrope_sections:
+            p3 = jnp.broadcast_to(pos_arr[None], (3, b, 1)) if pos3 is None else pos3
+            q = layers.apply_mrope(q, p3, cfg.mrope_sections, cfg.rope_theta)
+            k_new = layers.apply_mrope(k_new, p3, cfg.mrope_sections,
+                                       cfg.rope_theta)
+        else:
+            q = layers.apply_rope(q, pos_arr, cfg.rope_theta)
+            k_new = layers.apply_rope(k_new, pos_arr, cfg.rope_theta)
+        # write the new token into the stacked caches (no layer slices)
+        kfull = jax.lax.dynamic_update_slice(
+            kfull, sparse_attention.kv_quant(k_new, kfull.dtype)[None],
+            (li, 0, pos, 0, 0))
+        vfull = jax.lax.dynamic_update_slice(
+            vfull, sparse_attention.kv_quant(v_new, vfull.dtype)[None],
+            (li, 0, pos, 0, 0))
+        kfull = _pin(kfull, (None, ba, sa, ka, None))
+        vfull = _pin(vfull, (None, ba, sa, ka, None))
+        g = cfg.n_heads // cfg.n_kv_heads
+        qh = q.reshape(b, cfg.n_kv_heads, g, cfg.hd)
+        if use_sparse:
+            kp_li = jax.lax.dynamic_index_in_dim(kpfull, li, 0,
+                                                 keepdims=False)
+            kp_li = sparse_attention.update_page_summary(
+                kp_li, k_new, pos, cfg.kv_page)
+            kpfull = jax.lax.dynamic_update_index_in_dim(kpfull, kp_li,
+                                                         li, 0)
+            kpfull = _pin(kpfull, (None, ba, sa, ka, None))
+            if dist is not None:
+                o = sparse_attention.sparse_decode_distributed_full(
+                    qh, kfull, vfull, kp_li, li, pos, page=cfg.kv_page,
+                    k_pages=cfg.kv_topk_pages, **dist)
+            else:
+                o = sparse_attention.sparse_decode_full(
+                    qh, kfull, vfull, kp_li, li, pos, page=cfg.kv_page,
+                    k_pages=min(cfg.kv_topk_pages, max_len // cfg.kv_page))
+            o = o.reshape(b, 1, cfg.n_heads, cfg.hd)
+        else:
+            kc = jax.lax.dynamic_index_in_dim(kfull, li, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vfull, li, 0, keepdims=False)
+            o = layers.chunked_attention(
+                q, kc, vc, causal=True, q_offset=pos,
+                chunk=min(4096, max_len), logit_softcap=cfg.logit_softcap)
+        xc = xc + layers.attn_out(o, lp, cfg.d_model)
+        h2 = layers.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        xc = xc + _ffn(h2, lp, cfg)
+        return (xc, kfull, vfull, kpfull), None
+
+    kpage = cache.get("kpage")
+    if kpage is None:
+        kpage = jnp.zeros((cfg.n_layers, b, max_len // cfg.kv_page,
+                           cfg.n_kv_heads, cfg.hd), jnp.float32)
+    lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, k2, v2, kp2), _ = layers.scan_layers(
+        body, (x, cache["k"], cache["v"], kpage),
+        (params["layers"], lidx), unroll)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_last(params, cfg, x)
+    new_cache = {"k": k2, "v": v2, "pos": pos + 1}
+    if "kpage" in cache:
+        new_cache["kpage"] = kp2
+    return logits, new_cache

@@ -1,0 +1,82 @@
+"""Qwen2-VL backbone: text transformer + M-RoPE; vision frontend is a STUB
+(``input_specs`` provides precomputed patch embeddings + a (t,h,w) grid).
+
+Sequence layout: [patches | text].  Patches carry grid (t=0, h, w) M-RoPE
+positions; text continues with sequential t positions after the grid.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+
+init_params = transformer.init_params
+init_cache = transformer.init_cache
+
+
+def build_positions(cfg, n_patches: int, grid_hw: tuple[int, int],
+                    text_len: int, batch: int):
+    """M-RoPE position ids [3, B, n_patches + text_len]."""
+    gh, gw = grid_hw
+    hpos = (jnp.arange(n_patches) // gw) % gh
+    wpos = jnp.arange(n_patches) % gw
+    tpos = jnp.zeros((n_patches,), jnp.int32)
+    t0 = max(gh, gw)
+    text = t0 + jnp.arange(text_len)
+    pos_t = jnp.concatenate([tpos, text])
+    pos_h = jnp.concatenate([hpos, text])
+    pos_w = jnp.concatenate([wpos, text])
+    pos3 = jnp.stack([pos_t, pos_h, pos_w])              # [3, S]
+    return jnp.broadcast_to(pos3[:, None, :],
+                            (3, batch, n_patches + text_len))
+
+
+def embed_multimodal(params, cfg, patch_embeds, tokens):
+    txt = jnp.take(params["embed"], tokens, axis=0)
+    x = jnp.concatenate([patch_embeds.astype(txt.dtype), txt], axis=1)
+    return x
+
+
+def loss_fn(params, cfg, patch_embeds, tokens, labels, *,
+            remat: str = "full", unroll: bool = False):
+    """Loss over text positions only (patch positions excluded)."""
+    b, npatch, _ = patch_embeds.shape
+    text_len = tokens.shape[1]
+    gw = max(1, int(npatch ** 0.5))
+    pos3 = build_positions(cfg, npatch, (max(1, npatch // gw), gw),
+                           text_len, b)
+    x = embed_multimodal(params, cfg, patch_embeds, tokens)
+    hidden, _ = transformer.forward(params, cfg, input_embeds=x, pos3=pos3,
+                                    remat=remat, unroll=unroll)
+    hidden_text = hidden[:, npatch:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    from . import layers
+    return layers.chunked_xent(hidden_text, head, labels,
+                               chunk=min(1024, text_len))
+
+
+def prefill(params, cfg, patch_embeds, tokens, *, remat: str = "full",
+            unroll: bool = False):
+    b, npatch, _ = patch_embeds.shape
+    text_len = tokens.shape[1]
+    gw = max(1, int(npatch ** 0.5))
+    pos3 = build_positions(cfg, npatch, (max(1, npatch // gw), gw),
+                           text_len, b)
+    x = embed_multimodal(params, cfg, patch_embeds, tokens)
+    hidden, kvs = transformer.forward(params, cfg, input_embeds=x, pos3=pos3,
+                                      collect_kv=True, remat=remat,
+                                      unroll=unroll)
+    k, v = kvs
+    cache = transformer.make_cache(cfg, k, v, k.shape[2])
+    return transformer.logits_last(params, cfg, hidden), cache
+
+
+def decode_step(params, cfg, cache, token, *, sparse=None, dist=None,
+                unroll: bool = False):
+    # text continues with uniform positions: pos3 = current pos on all axes
+    b = token.shape[0]
+    pos3 = jnp.broadcast_to(cache["pos"][None, None, None], (3, b, 1))
+    return transformer.decode_step(params, cfg, cache, token, pos3=pos3,
+                                   sparse=sparse, dist=dist, unroll=unroll)

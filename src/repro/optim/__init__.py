@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, cosine_schedule, global_norm, init, update
+from .compress import (compressed_psum, compress_with_feedback,
+                       dequantize_int8, init_error_state, quantize_int8,
+                       wire_bytes)
+
+__all__ = ["AdamWConfig", "cosine_schedule", "global_norm", "init", "update",
+           "compressed_psum", "compress_with_feedback", "dequantize_int8",
+           "init_error_state", "quantize_int8", "wire_bytes"]

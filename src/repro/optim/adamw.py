@@ -1,0 +1,74 @@
+"""AdamW with dtype-configurable (ZeRO-friendly) moment states.
+
+Moments inherit the parameter sharding (already FSDP/TP-sharded by
+``sharding.tree_param_specs``), which is ZeRO-1 on the mesh: no chip holds
+a full optimizer state.  ``m_dtype=bfloat16`` halves optimizer memory for
+the ≥100B archs (recorded as a §Perf memory-term lever).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    m_dtype: str = "bfloat16"
+    v_dtype: str = "float32"
+    grad_clip: float = 1.0
+
+
+def init(params, cfg: AdamWConfig):
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.m_dtype)),
+                     params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.v_dtype)),
+                     params)
+    return {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, lr: jax.Array, cfg: AdamWConfig):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m2 / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # decay matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        return (p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda _, o: o[0], grads, out)
+    new_m = jax.tree.map(lambda _, o: o[1], grads, out)
+    new_v = jax.tree.map(lambda _, o: o[2], grads, out)
+    return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,178 @@
+"""Training loop: jit'd train_step with explicit shardings, microbatch
+gradient accumulation, checkpoint/restart, preemption, straggler watchdog.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import optim, sharding
+from ..models import api
+from . import checkpoint, fault
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 20
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    remat: str = "full"
+    unroll: bool = False     # dry-run cost analysis (see layers.scan_layers)
+    microbatch: int = 0      # >0: gradient accumulation in chunks of this
+    opt: optim.AdamWConfig = field(default_factory=optim.AdamWConfig)
+
+
+def init_state(cfg, train_cfg: TrainConfig, key) -> dict:
+    params = api.init_params(cfg, key)
+    return {"params": params, "opt": optim.init(params, train_cfg.opt)}
+
+
+def make_train_step(cfg, train_cfg: TrainConfig):
+    lr_fn = optim.cosine_schedule(train_cfg.lr, train_cfg.warmup,
+                                  train_cfg.steps)
+
+    def loss_of(params, batch):
+        return api.loss_fn(cfg, params, batch, remat=train_cfg.remat,
+                           unroll=train_cfg.unroll)
+
+    def grads_of(params, batch):
+        mb = train_cfg.microbatch
+        b = jax.tree.leaves(batch)[0].shape[0]
+        if not mb or mb >= b:
+            return jax.value_and_grad(loss_of)(params, batch)
+        # gradient accumulation over microbatches (scan); accumulator in
+        # param dtype (bf16): <=8 additions, saves a params-sized f32
+        n = b // mb
+        split = jax.tree.map(
+            lambda x: x.reshape(n, mb, *x.shape[1:]), batch)
+
+        def acc_fn(carry, mbatch):
+            loss, g = jax.value_and_grad(loss_of)(params, mbatch)
+            # ZeRO-2: reduce-scatter each microbatch's grads immediately
+            # (otherwise every microbatch pays a full all-reduce)
+            g = sharding.constrain_like_params(g)
+            carry = (carry[0] + loss,
+                     jax.tree.map(lambda a, b_: a + b_.astype(a.dtype),
+                                  carry[1], g))
+            return carry, None
+
+        zero = (jnp.zeros(()), jax.tree.map(
+            lambda p: jnp.zeros(p.shape, p.dtype), params))
+        from ..models import layers as _l
+        (loss, grads), _ = _l.inner_scan(acc_fn, zero, split, n)
+        return loss / n, jax.tree.map(lambda g: g / n, grads)
+
+    def train_step(state, batch, step):
+        loss, grads = grads_of(state["params"], batch)
+        # pin gradients to the parameter sharding: the batch-reduction
+        # lowers to reduce-scatter on the FSDP axis instead of all-reduce
+        grads = sharding.constrain_like_params(grads)
+        lr = lr_fn(step)
+        new_params, new_opt, gnorm = optim.update(
+            grads, state["opt"], state["params"], lr, train_cfg.opt)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def state_shardings(state, mesh):
+    """NamedSharding pytree for the train state (opt moments mirror
+    params — ZeRO-1 via the FSDP axis in the param specs)."""
+    axes = dict(mesh.shape)
+    pspecs = sharding.tree_param_specs(state["params"], axes)
+
+    def named(spec):
+        return NamedSharding(mesh, spec)
+    out = {
+        "params": jax.tree.map(named, pspecs),
+        "opt": {
+            "m": jax.tree.map(named, pspecs),
+            "v": jax.tree.map(named, pspecs),
+            "count": NamedSharding(mesh, P()),
+        },
+    }
+    return out
+
+
+def batch_shardings(batch, mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    def one(x):
+        spec = [None] * x.ndim
+        if x.ndim and dp:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch)
+
+
+def run(cfg, train_cfg: TrainConfig, data_iter, *, mesh=None, state=None,
+        key=None, callbacks=()):
+    """Full training loop with restart/preemption/straggler handling.
+
+    Returns (state, history).  ``data_iter`` yields (step, batch) so the
+    pipeline is restart-consistent by construction.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    start_step = 0
+    if state is None:
+        state = init_state(cfg, train_cfg, key)
+        if train_cfg.ckpt_dir and checkpoint.latest_steps(train_cfg.ckpt_dir):
+            state, start_step, _ = checkpoint.restore(train_cfg.ckpt_dir,
+                                                      state)
+            print(f"[trainer] resumed from step {start_step}")
+
+    step_fn = make_train_step(cfg, train_cfg)
+    if mesh is not None:
+        shardings = state_shardings(state, mesh)
+        state = jax.device_put(state, shardings)
+        step_fn = jax.jit(step_fn,
+                          in_shardings=(shardings, None, None),
+                          out_shardings=(shardings, None),
+                          donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    preempt = fault.PreemptionHandler()
+    preempt.install()
+    watchdog = fault.StragglerWatchdog()
+    history = []
+    for step, batch in data_iter:
+        if step < start_step:
+            continue
+        if step >= train_cfg.steps:
+            break
+        watchdog.start()
+        state, metrics = step_fn(state, batch, jnp.asarray(step))
+        loss = float(metrics["loss"])
+        watchdog.stop(step)
+        history.append({"step": step, "loss": loss,
+                        "gnorm": float(metrics["gnorm"])})
+        if step % train_cfg.log_every == 0:
+            print(f"[trainer] step {step} loss {loss:.4f} "
+                  f"gnorm {float(metrics['gnorm']):.3f}")
+        for cb in callbacks:
+            cb(step, state, metrics)
+        if fault.should_inject_failure(step):
+            raise RuntimeError(f"injected failure at step {step}")
+        done = step + 1 >= train_cfg.steps
+        if train_cfg.ckpt_dir and (
+                (step + 1) % train_cfg.ckpt_every == 0 or done
+                or preempt.should_checkpoint_and_exit):
+            checkpoint.save(train_cfg.ckpt_dir, step + 1, state)
+        if preempt.should_checkpoint_and_exit:
+            print("[trainer] preemption: checkpointed, exiting cleanly")
+            break
+    if watchdog.flagged:
+        print("[trainer] straggler mitigation:\n"
+              + watchdog.mitigation_plan())
+    return state, history

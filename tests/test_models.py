@@ -1,0 +1,239 @@
+"""Per-architecture smoke tests (reduced configs, one fwd/train step on
+CPU, output shapes + no NaNs) and decode/forward consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_shape
+from repro.models import api, transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = api.init_params(cfg, KEY)
+    cell = smoke_shape("train")
+    batch = api.make_inputs(cfg, cell, KEY)
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(cfg, p, batch, remat="none"))(params)
+    assert np.isfinite(float(loss))
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 3 * np.log(cfg.vocab)
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = api.init_params(cfg, KEY)
+    b, max_len = 2, 32
+    cache = api.init_cache(cfg, b, max_len, params=params)
+    token = jnp.zeros((b,), jnp.int32)
+    logits, cache2 = api.decode_fn(cfg, params, cache, token)
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2["pos"]) == 1
+    logits3, _ = api.decode_fn(cfg, params, cache2, token)
+    assert bool(jnp.all(jnp.isfinite(logits3)))
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    from repro.configs.base import ArchConfig
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                     head_dim=16, act="swiglu", qkv_bias=True,
+                     tie_embeddings=True, param_dtype="float32",
+                     kv_page=4, kv_topk_pages=16)
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+def _pad_cache(cfg, cache, max_len):
+    l, b, s, kv, d = cache["k"].shape
+    z = jnp.zeros((l, b, max_len - s, kv, d), cache["k"].dtype)
+    out = {"k": jnp.concatenate([cache["k"], z], 2),
+           "v": jnp.concatenate([cache["v"], z], 2), "pos": cache["pos"]}
+    npad = max_len // cfg.kv_page - cache["kpage"].shape[2]
+    out["kpage"] = jnp.concatenate(
+        [cache["kpage"], jnp.zeros((l, b, npad, kv, d), jnp.float32)], 2)
+    return out
+
+
+class TestDecodeConsistency:
+    def test_prefill_matches_forward(self, dense_setup):
+        cfg, params, toks = dense_setup
+        logits_p, _ = T.prefill(params, cfg, toks)
+        hidden, _ = T.forward(params, cfg, toks)
+        np.testing.assert_allclose(
+            np.asarray(logits_p),
+            np.asarray(T.logits_last(params, cfg, hidden)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_dense_decode_matches_forward(self, dense_setup):
+        cfg, params, toks = dense_setup
+        logits_p, cache = T.prefill(params, cfg, toks)
+        cache = _pad_cache(cfg, cache, 64)
+        nxt = jnp.argmax(logits_p, -1)
+        lg_dec, _ = T.decode_step(params, cfg, cache, nxt, sparse=False)
+        toks2 = jnp.concatenate([toks, nxt[:, None]], 1)
+        h2, _ = T.forward(params, cfg, toks2)
+        np.testing.assert_allclose(
+            np.asarray(lg_dec),
+            np.asarray(T.logits_last(params, cfg, h2)),
+            rtol=3e-4, atol=3e-4)
+
+    def test_sparse_decode_full_coverage_matches_dense(self, dense_setup):
+        cfg, params, toks = dense_setup
+        logits_p, cache = T.prefill(params, cfg, toks)
+        cache = _pad_cache(cfg, cache, 64)
+        nxt = jnp.argmax(logits_p, -1)
+        lg_dense, _ = T.decode_step(params, cfg, cache, nxt, sparse=False)
+        lg_sparse, _ = T.decode_step(params, cfg, cache, nxt, sparse=True)
+        np.testing.assert_allclose(np.asarray(lg_sparse),
+                                   np.asarray(lg_dense),
+                                   rtol=3e-3, atol=3e-3)
+
+    def test_sparse_decode_low_coverage_approximates(self, dense_setup):
+        """Dropping pages degrades gracefully.  Note: at *random init*
+        attention is diffuse (no heavy hitters), so this is the worst case
+        for TopK sparsity — trained models concentrate much harder."""
+        cfg, params, toks = dense_setup
+        for k_pages, min_corr in ((8, 0.9), (6, 0.8)):
+            cfgk = dataclasses.replace(cfg, kv_topk_pages=k_pages)
+            logits_p, cache = T.prefill(params, cfgk, toks)
+            cache = _pad_cache(cfgk, cache, 64)
+            nxt = jnp.argmax(logits_p, -1)
+            lg_dense, _ = T.decode_step(params, cfgk, cache, nxt,
+                                        sparse=False)
+            lg_sparse, _ = T.decode_step(params, cfgk, cache, nxt,
+                                         sparse=True)
+            d = np.asarray(lg_dense)
+            s = np.asarray(lg_sparse)
+            corr = np.corrcoef(d.ravel(), s.ravel())[0, 1]
+            assert corr > min_corr, (k_pages, corr)
+
+
+def test_ssm_decode_matches_forward():
+    from repro.models import ssm
+    cfg = get_config("mamba2-130m").reduced()
+    params = ssm.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    cache = ssm.init_cache(cfg, 2)
+    for t in range(8):
+        logits_seq, cache = ssm.decode_step(params, cfg, cache, toks[:, t])
+    hidden = ssm.forward(params, cfg, toks[:, :8])
+    logits_full = jnp.einsum("bd,vd->bv", hidden[:, -1].astype(jnp.float32),
+                             params["embed"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(logits_seq),
+                               np.asarray(logits_full), rtol=3e-3, atol=3e-3)
+
+
+def test_hybrid_decode_matches_forward():
+    from repro.models import hybrid
+    cfg = get_config("recurrentgemma-9b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=5)   # 1 group + 2-layer tail
+    params = hybrid.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab)
+    cache = hybrid.init_cache(cfg, 2, max_len=24)
+    for t in range(12):
+        logits_seq, cache = hybrid.decode_step(params, cfg, cache,
+                                               toks[:, t])
+    hidden = hybrid.forward(params, cfg, toks[:, :12])
+    logits_full = jnp.einsum("bd,vd->bv", hidden[:, -1].astype(jnp.float32),
+                             params["embed"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(logits_seq),
+                               np.asarray(logits_full), rtol=5e-3, atol=5e-3)
+
+
+def test_unroll_matches_scan(dense_setup):
+    cfg, params, toks = dense_setup
+    labels = jnp.roll(toks, -1, 1)
+    l_scan = T.loss_fn(params, cfg, toks, labels, remat="none")
+    l_unroll = T.loss_fn(params, cfg, toks, labels, remat="none",
+                         unroll=True)
+    np.testing.assert_allclose(float(l_scan), float(l_unroll), rtol=1e-5)
+
+
+def test_params_count_close_to_reference():
+    # tinyllama is 1.1B; analytic count should be within 5%
+    cfg = get_config("tinyllama-1.1b")
+    assert abs(cfg.params_count() - 1.1e9) / 1.1e9 < 0.05
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert 200e9 < moe.params_count() < 280e9
+    assert 15e9 < moe.active_params_count() < 30e9
+
+
+def test_ssm_prefill_then_decode_matches_forward():
+    from repro.models import ssm
+    cfg = get_config("mamba2-130m").reduced()
+    params = ssm.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab)
+    lg, cache = ssm.prefill(params, cfg, toks[:, :16], remat="none")
+    for t in range(16, 20):
+        lg, cache = ssm.decode_step(params, cfg, cache, toks[:, t])
+    hidden = ssm.forward(params, cfg, toks[:, :20])
+    lf = jnp.einsum("bd,vd->bv", hidden[:, -1].astype(jnp.float32),
+                    params["embed"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lf), rtol=3e-3,
+                               atol=3e-3)
+
+
+def test_hybrid_prefill_then_decode_matches_forward():
+    from repro.models import hybrid
+    cfg = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
+                              n_layers=5, window=8)
+    params = hybrid.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab)
+    lg, cache = hybrid.prefill(params, cfg, toks[:, :16], remat="none")
+    for t in range(16, 20):
+        lg, cache = hybrid.decode_step(params, cfg, cache, toks[:, t])
+    hidden = hybrid.forward(params, cfg, toks[:, :20])
+    lf = jnp.einsum("bd,vd->bv", hidden[:, -1].astype(jnp.float32),
+                    params["embed"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lf), rtol=5e-3,
+                               atol=5e-3)
+
+
+def test_int8_kv_cache_quality():
+    """int8 KV (beyond-paper §Perf lever): decode logits match bf16-cache
+    decode almost exactly (fixed-scale symmetric quant)."""
+    from repro.configs.base import ArchConfig
+    cfg = ArchConfig(name="t8", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                     head_dim=16, act="swiglu", tie_embeddings=True,
+                     param_dtype="float32", kv_page=4, kv_topk_pages=16)
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab)
+
+    def run(kv_dtype, sparse):
+        c = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+        logits_p, cache = T.prefill(params, c, toks)
+        cache = _pad_cache(c, cache, 64) if kv_dtype != "int8" else cache
+        if kv_dtype == "int8":
+            l, b, s, kv, d = cache["k"].shape
+            z = jnp.zeros((l, b, 64 - s, kv, d), cache["k"].dtype)
+            cache = {"k": jnp.concatenate([cache["k"], z], 2),
+                     "v": jnp.concatenate([cache["v"], z], 2),
+                     "pos": cache["pos"],
+                     "kpage": jnp.concatenate(
+                         [cache["kpage"],
+                          jnp.zeros((l, b, (64 - s) // c.kv_page, kv, d),
+                                    jnp.float32)], 2)}
+        nxt = jnp.argmax(logits_p, -1)
+        lg, _ = T.decode_step(params, c, cache, nxt, sparse=sparse)
+        return np.asarray(lg)
+
+    for sparse in (False, True):
+        ref_l = run("bfloat16", sparse)
+        q8 = run("int8", sparse)
+        corr = np.corrcoef(ref_l.ravel(), q8.ravel())[0, 1]
+        assert corr > 0.995, (sparse, corr)
+        assert (ref_l.argmax(-1) == q8.argmax(-1)).all()

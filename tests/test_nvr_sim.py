@@ -1,0 +1,158 @@
+"""Unit + paper-claim tests for the NVR simulator (paper-faithful layer)."""
+
+import statistics
+
+import numpy as np
+import pytest
+
+from repro.core.nvr import (Cache, DRAM, LINE_BYTES, make_hierarchy,
+                            make_trace, run_modes, simulate)
+from repro.core.nvr.traces import WORKLOADS
+
+ALL = list(WORKLOADS)
+
+
+class TestCache:
+    def test_hit_after_fill(self):
+        c = Cache(64 * 1024, ways=8, hit_latency=20.0)
+        c.fill(123, ready=5.0)
+        assert c.probe(123, now=10.0) == pytest.approx(30.0)
+        assert c.stats.hits == 1
+
+    def test_miss_is_none(self):
+        c = Cache(64 * 1024, ways=8, hit_latency=20.0)
+        assert c.probe(7, now=0.0) is None
+        assert c.stats.demand_misses == 1
+
+    def test_lru_eviction(self):
+        c = Cache(8 * LINE_BYTES, ways=2, hit_latency=1.0)  # 4 sets x 2 ways
+        s = c.num_sets
+        a, b, d = 0, s, 2 * s          # all map to set 0
+        for line in (a, b):
+            c.fill(line, 0.0)
+            c.probe(line, 1.0)
+        c.fill(d, 2.0)
+        c.drain(3.0)
+        assert c.probe(a, 4.0) is None          # a was LRU -> evicted
+        assert c.probe(b, 5.0) is not None
+
+    def test_mshr_coalescing(self):
+        c = Cache(64 * 1024, ways=8, hit_latency=2.0)
+        c.fill(9, ready=100.0)
+        t = c.probe(9, now=10.0)      # in flight: coalesced, waits
+        assert t == pytest.approx(102.0)
+        assert c.stats.coalesced == 1
+        assert c.stats.demand_misses == 0
+
+    def test_prefetch_accounting(self):
+        c = Cache(64 * 1024, ways=8, hit_latency=2.0)
+        c.fill(5, ready=1.0, prefetch=True)
+        assert c.stats.prefetch_fills == 1
+        c.probe(5, now=10.0)
+        assert c.stats.prefetch_used == 1
+
+
+class TestDRAM:
+    def test_bandwidth_queuing(self):
+        d = DRAM(latency=100.0, bytes_per_cycle=16.0)
+        t1 = d.fetch(0.0)             # 64B -> 4 cycles occupancy
+        t2 = d.fetch(0.0)
+        assert t1 == pytest.approx(104.0)
+        assert t2 == pytest.approx(108.0)   # queued behind the first
+        assert d.bytes_transferred == 128
+
+
+@pytest.mark.parametrize("wl", ALL)
+def test_workload_traces_deterministic(wl):
+    t1 = make_trace(wl, dtype_bytes=2, scale=0.25)
+    t2 = make_trace(wl, dtype_bytes=2, scale=0.25)
+    assert t1.n_vloads == t2.n_vloads > 0
+    a1 = [op.addrs for op in t1.ops if hasattr(op, "addrs")]
+    a2 = [op.addrs for op in t2.ops if hasattr(op, "addrs")]
+    np.testing.assert_array_equal(np.concatenate(a1), np.concatenate(a2))
+
+
+@pytest.mark.parametrize("wl", ALL)
+def test_prefetchers_never_corrupt_metrics(wl):
+    tr = make_trace(wl, dtype_bytes=2, scale=0.25)
+    for r in run_modes(tr, 2):
+        assert r.total > 0
+        assert r.stall >= 0 or r.mode == "dense"
+        assert r.demand_misses >= 0
+
+
+class TestPaperClaims:
+    """Soft quantitative checks against the paper's headline numbers
+    (tolerances documented in EXPERIMENTS.md §Paper-claims)."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        out = {}
+        for wl in ALL:
+            tr = make_trace(wl, dtype_bytes=2, scale=0.5)
+            out[wl] = {r.mode: r for r in run_modes(tr, 2)}
+        return out
+
+    def test_nvr_speedup_vs_no_prefetch(self, results):
+        sp = [rs["inorder"].total / rs["nvr"].total
+              for rs in results.values()]
+        g = statistics.geometric_mean(sp)
+        assert g > 3.0, f"paper ~4x, got {g:.2f}x"
+
+    def test_miss_reduction_vs_sota(self, results):
+        red = []
+        for rs in results.values():
+            best = min(rs["imp"].demand_misses, rs["dvr"].demand_misses)
+            if best:
+                red.append(1 - rs["nvr"].demand_misses / best)
+        assert statistics.mean(red) > 0.75, "paper ~90%"
+
+    def test_accuracy_coverage_above_90(self, results):
+        acc = [rs["nvr"].accuracy for rs in results.values()
+               if np.isfinite(rs["nvr"].accuracy)]
+        cov = [rs["nvr"].coverage for rs in results.values()]
+        assert statistics.mean(acc) > 0.9
+        assert statistics.mean(cov) > 0.9
+
+    def test_bandwidth_reduction(self, results):
+        red = [1 - rs["nvr"].offchip / rs["inorder"].offchip
+               for rs in results.values()]
+        assert 0.55 < statistics.mean(red) < 0.95, "paper ~75%"
+
+    def test_nvr_beats_all_baselines_on_misses(self, results):
+        for wl, rs in results.items():
+            for other in ("stream", "imp", "dvr"):
+                assert rs["nvr"].demand_misses <= rs[other].demand_misses, \
+                    f"{wl}: nvr vs {other}"
+
+    def test_nsb_helps_nvr(self):
+        gains = []
+        for wl in ALL:
+            tr = make_trace(wl, dtype_bytes=4, scale=0.5)
+            nvr = simulate(tr, "inorder", prefetcher="nvr")
+            nsb = simulate(tr, "inorder", prefetcher="nvr", nsb_kb=16)
+            gains.append(1 - nsb.stall / nvr.stall)
+        assert statistics.mean(gains) > 0.2, "paper ~40%"
+
+
+def test_ooo_between_inorder_and_nvr():
+    tr = make_trace("DS", dtype_bytes=2, scale=0.5)
+    rs = {r.mode: r for r in run_modes(tr, 2)}
+    assert rs["nvr"].total < rs["ooo"].total < rs["inorder"].total
+
+
+def test_nvr_component_ablation_ordering():
+    """Beyond-paper ablation invariant: disabling the Sparse Chain
+    Detector (indirect resolution) must hurt more than disabling the
+    Loop Bound Detector, and both must be worse than full NVR."""
+    import statistics
+    sp = {"full": [], "no_scd": [], "no_lbd": []}
+    for wl in ("DS", "GCN", "MK"):
+        tr = make_trace(wl, dtype_bytes=2, scale=0.25)
+        ino = simulate(tr, "inorder")
+        for name, kw in (("full", {}), ("no_scd", {"scd": False}),
+                         ("no_lbd", {"lbd": False})):
+            r = simulate(tr, "inorder", prefetcher="nvr", pf_kwargs=kw)
+            sp[name].append(ino.total / r.total)
+    g = {k: statistics.geometric_mean(v) for k, v in sp.items()}
+    assert g["no_scd"] < g["no_lbd"] < g["full"], g

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nvr.machine import Cache, DRAM, LINE_BYTES
+from repro.kernels import coalesce_indices, ops
+from repro.models import layers
+from repro.optim import compress
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(st.lists(st.integers(0, 4096), min_size=1, max_size=200),
+       st.integers(2, 8))
+def test_cache_capacity_invariant(lines, ways):
+    """A cache never holds more lines than its capacity, and a re-probe of
+    the most recent line always hits."""
+    c = Cache(16 * LINE_BYTES * ways, ways=ways, hit_latency=1.0)
+    t = 0.0
+    for ln in lines:
+        t += 1.0
+        if c.probe(ln, t) is None:
+            c.fill(ln, t)
+            c.probe(ln, t + 1)
+    held = sum(len(s) for s in c.sets)
+    assert held <= c.num_sets * ways
+    assert c.probe(lines[-1], t + 10) is not None
+
+
+@SET
+@given(st.lists(st.integers(0, 1000), min_size=2, max_size=100))
+def test_dram_fifo_monotonic(addrs):
+    """DRAM completion times are monotone for same-time issues (FIFO)."""
+    d = DRAM(latency=50.0, bytes_per_cycle=8.0)
+    times = [d.fetch(0.0) for _ in addrs]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    assert d.bytes_transferred == len(addrs) * LINE_BYTES
+
+
+@SET
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=128))
+def test_coalesce_indices_permutation(idx):
+    arr = jnp.asarray(np.array(idx, np.int32))
+    sorted_idx, inv = coalesce_indices(arr)
+    assert bool(jnp.all(jnp.diff(sorted_idx) >= 0))
+    np.testing.assert_array_equal(np.asarray(sorted_idx[inv]),
+                                  np.asarray(arr))
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(16, 64))
+def test_group_tokens_by_expert_sound(e_pow, bt_pow, t_scale)\
+        :
+    """Every kept token lands in a block labelled with its own expert."""
+    e, bt = 2 ** e_pow, 8 * bt_pow
+    t = t_scale * 4
+    rng = np.random.default_rng(e * bt + t)
+    eids = jnp.asarray(rng.integers(0, e, t), jnp.int32)
+    perm, group_ids, inv = ops.group_tokens_by_expert(eids, e, bt)
+    kept = np.asarray(inv >= 0)
+    pos = np.asarray(inv)[kept]
+    assert len(np.unique(pos)) == kept.sum()        # injective placement
+    np.testing.assert_array_equal(np.asarray(group_ids)[pos // bt],
+                                  np.asarray(eids)[kept])
+
+
+@SET
+@given(st.floats(0.01, 100.0), st.integers(1, 8))
+def test_int8_compress_error_bound(scale, seed):
+    """Quantisation error is bounded by half a quantisation step."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
+    q, s = compress.quantize_int8(g)
+    err = np.abs(np.asarray(compress.dequantize_int8(q, s) - g))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@SET
+@given(st.integers(1, 5))
+def test_error_feedback_converges(seed):
+    """With error feedback, the accumulated compressed signal converges to
+    the true accumulated gradient (bias-free compression)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        deq, err = compress.compress_with_feedback(g, err)
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc + err), np.asarray(g * n),
+                               rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 3),
+       st.integers(2, 5))
+def test_chunked_attention_matches_naive(b, sq_b, h, sk_chunks):
+    """Flash-style chunked attention == naive softmax attention."""
+    sq, sk, d = 4 * sq_b, 8 * sk_chunks, 16
+    rng = np.random.default_rng(b * 100 + sq + h + sk_chunks)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sk, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sk, h, d)), jnp.float32)
+    out = layers.chunked_attention(q, k, v, causal=False, chunk=8)
+    s = np.einsum("bqhd,bkhd->bqhk", np.asarray(q),
+                  np.asarray(k)) / np.sqrt(d)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bqhk,bkhd->bqhd", p, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+@SET
+@given(st.integers(0, 1000), st.integers(1, 30))
+def test_rglru_decay_bounded(seed, s):
+    """RG-LRU hidden state norm stays bounded (contraction property)."""
+    from repro.models.hybrid import rglru
+    rng = np.random.default_rng(seed)
+    ru = 8
+    p = {"w_rg_r": jnp.asarray(rng.normal(size=(ru, ru)) * 0.1, jnp.float32),
+         "w_rg_i": jnp.asarray(rng.normal(size=(ru, ru)) * 0.1, jnp.float32),
+         "lam": jnp.full((ru,), 3.0, jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(1, s, ru)), jnp.float32)
+    y, h_last = rglru(x, p)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # sqrt(1-a^2) gating makes the map non-expansive per step
+    assert float(jnp.max(jnp.abs(h_last))) <= float(
+        jnp.max(jnp.abs(x))) * (1 + 1e-3) * s ** 0.5 + 1.0
+
+
+@SET
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3))
+def test_ssd_chunked_equals_sequential(b, nh, chunks):
+    from repro.models.ssm import ssd_chunked
+    s, hd, ds, ck = 4 * chunks, 4, 5, 4
+    rng = np.random.default_rng(b * 7 + nh * 3 + chunks)
+    xh = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.5, size=(b, s, nh)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.3, 1.0, size=(nh,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, ds)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, ds)), jnp.float32)
+    y, st_ = ssd_chunked(xh, dt, A, B, C, chunk=ck)
+    h = np.zeros((b, nh, hd, ds))
+    ys = []
+    for t in range(s):
+        a = np.exp(np.asarray(dt[:, t]) * np.asarray(A))
+        h = h * a[:, :, None, None] + np.einsum(
+            "bn,bnp,bs->bnps", np.asarray(dt[:, t]), np.asarray(xh[:, t]),
+            np.asarray(B[:, t]))
+        ys.append(np.einsum("bs,bnps->bnp", np.asarray(C[:, t]), h))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_), h, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,123 @@
+"""End-to-end behaviour tests: training learns, serving generates, the
+NVR sparse path is a faithful accelerator of the dense path, and the
+sharding rules produce coherent specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding
+from repro.configs import get_config
+from repro.data import pipeline
+from repro.models import api
+from repro.serve.engine import Engine
+from repro.train import trainer
+
+
+def test_training_reduces_loss():
+    cfg = get_config("llama3.2-1b").reduced()
+    dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    tc = trainer.TrainConfig(steps=30, lr=1e-3, warmup=5, log_every=100,
+                             remat="none")
+    it = ((s, {"tokens": t, "labels": l})
+          for s, (t, l) in pipeline.batches(dcfg))
+    _, hist = trainer.run(cfg, tc, it)
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    assert last < first - 0.25, f"{first} -> {last}"
+
+
+def test_training_with_microbatch_matches_full():
+    cfg = get_config("qwen2-1.5b").reduced()
+    dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+
+    def run(mb):
+        tc = trainer.TrainConfig(steps=4, log_every=100, remat="none",
+                                 microbatch=mb)
+        it = ((s, {"tokens": t, "labels": l})
+              for s, (t, l) in pipeline.batches(dcfg))
+        state, hist = trainer.run(cfg, tc, it, key=jax.random.PRNGKey(3))
+        return state, [h["loss"] for h in hist]
+
+    s_full, l_full = run(0)
+    s_mb, l_mb = run(2)
+    np.testing.assert_allclose(l_full, l_mb, rtol=2e-2)
+    for a, b in zip(jax.tree.leaves(s_full["params"]),
+                    jax.tree.leaves(s_mb["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_serving_engine_sparse_vs_dense_agree():
+    """With the TopK budget covering the whole context, the sparse decode
+    must reproduce the dense trajectory exactly.  (At partial coverage and
+    *random init* attention is diffuse — the worst case for TopK — so
+    trajectory agreement is only asserted in the full-coverage regime;
+    quality-at-coverage is studied in test_models.py.)"""
+    import dataclasses
+    cfg = get_config("tinyllama-1.1b").reduced()
+    cfg = dataclasses.replace(cfg, kv_topk_pages=12)  # 48/4 pages: full
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    from repro.configs.base import ShapeCell
+    cell = ShapeCell("s", 32, 2, "prefill")
+    batch = api.make_inputs(cfg, cell, key)
+    out_d = Engine(cfg, params, max_len=48, sparse=False).generate(batch, 12)
+    out_s = Engine(cfg, params, max_len=48, sparse=True).generate(batch, 12)
+    agree = (out_d == out_s).mean()
+    assert agree > 0.9, f"sparse/dense token agreement {agree}"
+
+
+def test_serving_engine_nsb_stats():
+    cfg = get_config("qwen2-1.5b").reduced()
+    key = jax.random.PRNGKey(1)
+    params = api.init_params(cfg, key)
+    from repro.configs.base import ShapeCell
+    cell = ShapeCell("s", 32, 2, "prefill")
+    batch = api.make_inputs(cfg, cell, key)
+    eng = Engine(cfg, params, max_len=64, sparse=True, nsb_pages=32)
+    eng.generate(batch, 16)
+    s = eng.stats
+    assert s.pages_touched > 0
+    assert 0.0 <= s.hot_hit_rate <= 1.0
+    # decode TopK selections exhibit strong temporal reuse (the paper's
+    # premise for the NSB)
+    assert s.hot_hit_rate > 0.5
+
+
+def test_sharding_rules_divisibility():
+    """Every assigned arch's parameter specs divide evenly on the
+    production mesh axes."""
+    axes = {"data": 16, "model": 16}
+    from repro.configs import ARCH_NAMES
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        specs = sharding.tree_param_specs(api.param_specs(cfg), axes)
+        flat_p = jax.tree_util.tree_flatten_with_path(
+            api.param_specs(cfg))[0]
+        flat_s = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(
+                                     x, jax.sharding.PartitionSpec))
+        for (path, leaf), spec in zip(flat_p, flat_s):
+            for dim, s in zip(leaf.shape, spec):
+                if s is None:
+                    continue
+                n = int(np.prod([axes[a] for a in
+                                 ((s,) if isinstance(s, str) else s)]))
+                assert dim % n == 0, (arch, path, leaf.shape, spec)
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = sharding.constrain(x, "batch", "mlp")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_grad_compression_wire_bytes():
+    from repro.optim import compress
+    grads = {"a": jnp.ones((1024,)), "b": jnp.ones((256, 256))}
+    full = compress.wire_bytes(grads, compressed=False)
+    comp = compress.wire_bytes(grads, compressed=True)
+    assert comp < full / 1.9   # ~2x fewer wire bytes than bf16 (int8)
