@@ -87,6 +87,13 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
+    from repro.core.nvr.engine.sweep import write_artifacts
+    paths = write_artifacts(
+        "kernel_bench", "name,us_per_call,derived",
+        [(n, f"{us:.0f}", d) for n, us, d in rows],
+        os.path.join(os.path.dirname(__file__), "results"),
+        backend=jax.default_backend())
+    print(f"# artifacts: {paths['csv']} {paths['json']}")
 
 
 if __name__ == "__main__":

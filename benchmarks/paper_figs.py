@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import analytic
 from repro.core.nvr import overhead, run_modes, simulate
+from repro.core.nvr.engine.sweep import write_artifacts
 from repro.core.nvr.traces import WORKLOADS, make_trace
 
 SCALE = float(os.environ.get("BENCH_SCALE", "0.5"))
@@ -25,13 +26,11 @@ DTYPES = {"INT8": 1, "FP16": 2, "INT32": 4}
 
 
 def _write(name: str, header: str, rows: list) -> str:
-    os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, name)
-    with open(path, "w") as f:
-        f.write(header + "\n")
-        for r in rows:
-            f.write(",".join(str(x) for x in r) + "\n")
-    return path
+    """Persist one figure's rows as CSV + JSON via the shared sweep-runner
+    artifact writer (benchmarks and sweeps share one artifact format)."""
+    stem = name[:-4] if name.endswith(".csv") else name
+    paths = write_artifacts(stem, header, rows, RESULTS, scale=SCALE)
+    return paths["csv"]
 
 
 def fig5_latency():
@@ -43,7 +42,7 @@ def fig5_latency():
     for dt_name, dtb in DTYPES.items():
         for wl in WORKLOADS:
             tr = make_trace(wl, dtype_bytes=dtb, scale=SCALE)
-            rs = {r.mode: r for r in run_modes(tr, dtb)}
+            rs = {r.label: r for r in run_modes(tr, dtb)}
             ino = rs["inorder"]
             for mode, r in rs.items():
                 rows.append((wl, dt_name, mode, f"{r.total:.0f}",
@@ -81,7 +80,7 @@ def fig6_prefetch():
     nvr_load_red, nsb_extra, miss_red_sota = [], [], []
     for wl in WORKLOADS:
         tr = make_trace(wl, dtype_bytes=2, scale=SCALE)
-        rs = {r.mode: r for r in run_modes(tr, 2)}
+        rs = {r.label: r for r in run_modes(tr, 2)}
         ino = rs["inorder"]
         for p in acc:
             r = rs[p]
@@ -249,6 +248,154 @@ def table1_overhead():
     return rows, headline
 
 
+def engine_speedup():
+    """Tentpole acceptance: the full Fig. 5 mode sweep (8 workloads x 7
+    modes) on the event-driven engine vs the frozen seed per-op/per-line
+    ``simulate()`` loop (``engine/reference.py``), with bit-exact result
+    parity asserted on every row.
+
+    ``cold`` includes the one-time structure-of-arrays trace compilation;
+    ``steady`` is the best of two sweeps (the compile is cached on the
+    trace and shared by all mode/prefetcher runs — that amortisation is
+    the design, not a benchmarking artifact).
+    """
+    import gc
+    import time
+
+    from repro.core.nvr.engine.reference import run_modes_reference
+
+    traces_ref = {wl: make_trace(wl, dtype_bytes=2, scale=SCALE)
+                  for wl in WORKLOADS}
+    traces_eng = {wl: make_trace(wl, dtype_bytes=2, scale=SCALE)
+                  for wl in WORKLOADS}
+    gc.disable()  # timeit convention: measure the loops, not the collector
+    try:
+        t0 = time.perf_counter()
+        ref = {wl: run_modes_reference(tr, 2)
+               for wl, tr in traces_ref.items()}
+        t_ref = time.perf_counter() - t0
+
+        t_cold = t_steady = float("inf")
+        eng = {}
+        for rep in range(3):
+            t0 = time.perf_counter()
+            eng = {wl: run_modes(tr, 2) for wl, tr in traces_eng.items()}
+            dt = time.perf_counter() - t0
+            if rep == 0:
+                t_cold = dt
+            t_steady = min(t_steady, dt)
+    finally:
+        gc.enable()
+
+    rows = []
+    parity = True
+    for wl in WORKLOADS:
+        for a, b in zip(eng[wl], ref[wl]):
+            same = (a.total == b.total
+                    and a.demand_misses == b.demand_misses
+                    and a.pf_issued == b.pf_issued
+                    and a.pf_used == b.pf_used)
+            parity &= same
+            rows.append((wl, a.label, f"{a.total:.0f}", f"{b.total:.0f}",
+                         int(same)))
+    # the CI smoke step runs this benchmark: a parity regression must
+    # fail loudly, not just flip a float in the artifact
+    assert parity, "engine/reference divergence — see engine_speedup.csv"
+    headline = {
+        "seed_loop_s": t_ref,
+        "engine_cold_s": t_cold,
+        "engine_steady_s": t_steady,
+        "speedup_cold_x": t_ref / t_cold,
+        "speedup_x": t_ref / t_steady,
+        "parity_ok": float(parity),
+        "paper": "(engineering) 5x sweep target; measured ~4.5-5x on this "
+                 "1-core-quota container, bit-exact vs seed loop",
+    }
+    _write("engine_speedup.csv",
+           "workload,label,engine_total,seed_total,parity", rows)
+    return rows, headline
+
+
+def sweep_grid():
+    """Full grid through the sweep runner: workload x dtype x point x
+    nsb_kb, CSV + JSON artifacts in benchmarks/results/."""
+    import time
+
+    from repro.core.nvr import SweepSpec, run_sweep
+    from repro.core.nvr.engine.sweep import write_sweep
+
+    spec = SweepSpec(dtypes=(1, 2, 4), nsb_kbs=(0, 16), scale=SCALE)
+    t0 = time.perf_counter()
+    result = run_sweep(spec)
+    dt = time.perf_counter() - t0
+    write_sweep(result, RESULTS, name="sweep_grid", scale=SCALE)
+    import statistics as _st
+    sp = [ino.total / nvr.total for ino, nvr in zip(
+        (r for r in result.rows if r.label == "inorder"),
+        (r for r in result.rows if r.label == "nvr"))]
+    headline = {
+        "grid_points": float(len(result.rows)),
+        "sweep_s": dt,
+        "nvr_speedup_geomean": _st.geometric_mean(sp),
+        "paper": "~4x speedup across Table II / dtypes / NSB",
+    }
+    rows = [(r.workload, r.dtype_bytes, r.nsb_kb, r.label,
+             f"{r.total:.0f}") for r in result.rows]
+    return rows, headline
+
+
+def capture_roundtrip():
+    """Acceptance: capture -> simulate round trip.  A real serving-engine
+    decode run (TopK sparse-KV) is recorded by the capture adapters and
+    replayed through the full Fig. 5 mode set; NVR must cut demand misses
+    vs the in-order baseline on the *captured* traffic.  Also replays an
+    MoE routing decision through the expert-tile adapter."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeCell
+    from repro.core.nvr import capture
+    from repro.models import api
+    from repro.serve.engine import Engine
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    batch = api.make_inputs(cfg, ShapeCell("bench", 32, 2, "prefill"), key)
+    eng = Engine(cfg, params, max_len=64, sparse=True, nsb_pages=32,
+                 capture_trace=True)
+    eng.generate(batch, 12)
+    serve_rs = {r.label: r for r in run_modes(eng.captured_trace(), 2)}
+
+    rng = np.random.default_rng(0)
+    eids = rng.choice(8, p=[.35, .25, .15, .10, .06, .04, .03, .02],
+                      size=max(64, int(512 * SCALE)))
+    moe = capture.moe_expert_stream(eids, n_experts=8, d_model=128,
+                                    d_ff=256)
+    moe_rs = {r.label: r for r in run_modes(moe.to_trace(), 2)}
+
+    rows = []
+    for src, rs in (("serve_kv", serve_rs), ("moe_route", moe_rs)):
+        for label in ("inorder", "ooo", "stream", "imp", "dvr", "nvr"):
+            r = rs[label]
+            rows.append((src, label, f"{r.total:.0f}", r.demand_misses,
+                         f"{rs['inorder'].total / r.total:.3f}"))
+    headline = {
+        "serve_nvr_miss_reduction": 1 - (serve_rs["nvr"].demand_misses
+                                         / serve_rs["inorder"].demand_misses),
+        "serve_nvr_speedup": (serve_rs["inorder"].total
+                              / serve_rs["nvr"].total),
+        "serve_nsb_hot_hit_rate": eng.stats.hot_hit_rate,
+        "moe_nvr_miss_reduction": 1 - (moe_rs["nvr"].demand_misses
+                                       / moe_rs["inorder"].demand_misses),
+        "paper": "Fig. 8 decode story on *captured* serving traffic",
+    }
+    _write("capture_roundtrip.csv",
+           "source,label,total,demand_misses,speedup_vs_inorder", rows)
+    return rows, headline
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -257,4 +404,7 @@ ALL = {
     "fig9_nsb_sensitivity": fig9_nsb_sensitivity,
     "table1_overhead": table1_overhead,
     "ablation_nvr": ablation_nvr,     # beyond-paper component ablation
+    "engine_speedup": engine_speedup,  # engine vs frozen seed loop
+    "sweep_grid": sweep_grid,          # grid sweep runner + artifacts
+    "capture_roundtrip": capture_roundtrip,  # serve/MoE capture -> sim
 }

@@ -1,11 +1,21 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) plus the
-per-figure headline metrics vs the paper's claims.  Detailed per-row CSVs
-are written to benchmarks/results/.
+per-figure headline metrics vs the paper's claims.  Detailed per-row
+artifacts (paired CSV + JSON, via the engine sweep runner's writer) land
+in benchmarks/results/.
+
+Beyond the paper figures, three engineering benches ride along:
+  engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
+                      seed loop, with bit-exact parity asserted per row
+  sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
+                      the sweep runner (CSV + JSON artifacts)
+  capture_roundtrip — replay *captured* serving/MoE traffic through the
+                      simulator (needs jax; all paper figs are numpy-only)
 
   PYTHONPATH=src python -m benchmarks.run            # all figures
   BENCH_SCALE=1.0 PYTHONPATH=src python -m benchmarks.run fig5_latency
+  PYTHONPATH=src python -m benchmarks.run engine_speedup sweep_grid
 """
 
 from __future__ import annotations

@@ -22,7 +22,7 @@ def simulator_demo():
     from repro.core.nvr import make_trace, run_modes
     print("=== NVR simulator: Double Sparsity (LLM sparse KV) ===")
     tr = make_trace("DS", dtype_bytes=2, scale=0.5)
-    rs = {r.mode: r for r in run_modes(tr, 2)}
+    rs = {r.label: r for r in run_modes(tr, 2)}
     ino = rs["inorder"]
     print(f"{'mode':10s} {'cycles':>10s} {'stall':>10s} {'misses':>8s} "
           f"{'speedup':>8s}")

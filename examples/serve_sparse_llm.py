@@ -36,7 +36,8 @@ def main():
 
     dense = Engine(cfg, params, max_len=max_len, sparse=False)
     dense.generate(batch, args.gen)
-    sparse = Engine(cfg, params, max_len=max_len, sparse=True, nsb_pages=48)
+    sparse = Engine(cfg, params, max_len=max_len, sparse=True, nsb_pages=48,
+                    capture_trace=True)
     out = sparse.generate(batch, args.gen)
     s = sparse.stats
 
@@ -53,6 +54,15 @@ def main():
           f"{1 / max(1e-9, 1 - s.hot_hit_rate):.1f}x on top")
     print("[serve] this is the paper's LLM decode story: TopK sparsity "
           "cuts traffic, NVR+NSB make the remaining gathers cheap")
+
+    # capture -> simulate round trip: replay THIS decode run's page
+    # traffic through the cycle-level simulator (Fig. 5 modes)
+    from repro.core.nvr import run_modes
+    rs = {r.label: r for r in run_modes(sparse.captured_trace(), 2)}
+    ino, nvr = rs["inorder"], rs["nvr"]
+    print(f"[replay] captured trace: {ino.n_vloads} vector loads; "
+          f"inorder {ino.demand_misses} demand misses -> nvr "
+          f"{nvr.demand_misses} ({ino.total / nvr.total:.2f}x faster)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,169 @@
+"""Trace-capture adapters: turn *real* model/serving traffic into traces.
+
+The synthetic generators in :mod:`.traces` model Table-II workloads; this
+module closes the loop with the rest of the repo by recording the actual
+gather traffic the serving and model layers produce and lowering it into
+the same :class:`~.trace.Trace` format the simulator consumes:
+
+* :class:`PageStream` — a generic recorder for "select K rows of a table"
+  events (TopK KV pages, MoE expert weight tiles, CSR rows, ...).
+* :func:`to_trace` — lowers a recorded stream into the paper's
+  (index stream load -> indirect row gather -> compute) bundle shape.
+* :func:`kv_page_stream` — recorder preconfigured for TopK sparse-KV
+  decode page selections (``serve.Engine`` / ``sparse_attention``).
+* :func:`moe_expert_stream` — converts an MoE routing decision
+  (per-token expert ids, as produced by ``kernels.ops
+  .group_tokens_by_expert``) into expert-weight-tile gather traffic.
+* :class:`PageCache` — the NSB hot-set model backed by the shared
+  :class:`~.machine.Cache`, replacing the serving engine's ad-hoc LRU.
+
+Everything here is numpy-only: the jax layers hand over concrete index
+arrays (selections are materialised on host in the serving loop anyway),
+so the simulator core stays importable without jax.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .machine import Cache, LINE_BYTES
+from .trace import Trace, TraceBuilder
+from .traces import MAC_RATE, PC_IDX, _row_gather, _stream_idx
+
+
+@dataclass
+class PageStream:
+    """Recorded row-selection traffic against one indexed table.
+
+    ``events`` is a list of int arrays; each array holds the row ids one
+    selection event touched (one decode step for one (batch, head) slot,
+    one routed token block, ...).
+    """
+
+    name: str
+    n_rows: int             # number of rows in the indexed table
+    row_bytes: int          # bytes gathered per selected row
+    compute_per_row: float  # compute cycles per gathered row
+    events: list = field(default_factory=list)
+
+    def record(self, idx) -> None:
+        """Record one selection event (any int array-like of row ids)."""
+        arr = np.asarray(idx, dtype=np.int64).reshape(-1)
+        if arr.size:
+            self.events.append(arr)
+
+    def record_batched(self, idx) -> None:
+        """Record ``idx[..., K]`` as one event per leading slot — e.g. a
+        ``[B, KV, K]`` TopK selection becomes ``B*KV`` events."""
+        arr = np.asarray(idx, dtype=np.int64)
+        for row in arr.reshape(-1, arr.shape[-1]):
+            self.events.append(row.copy())
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @property
+    def rows_selected(self) -> int:
+        return sum(len(e) for e in self.events)
+
+    def to_trace(self) -> Trace:
+        return to_trace(self)
+
+
+def to_trace(stream: PageStream) -> Trace:
+    """Lower a recorded stream into a simulator trace.
+
+    Each event becomes one sparse loop instance (bound): a stream load of
+    the selected row ids, an indirect gather of the (sorted) rows, and
+    the compute tile those rows feed — exactly the bundle shape the
+    synthetic Table-II generators emit, so every prefetcher model sees
+    the hardware-visible fields it expects.
+    """
+    if not stream.events:
+        raise ValueError(f"PageStream {stream.name!r} has no recorded "
+                         "events; run traffic through the recorder first")
+    tb = TraceBuilder(stream.name)
+    table = tb.alloc("table", stream.n_rows * stream.row_bytes,
+                     indirect=True)
+    idxb = tb.alloc("idx", max(4, stream.rows_selected * 4))
+    pos = 0
+    for ev in stream.events:
+        tb.new_bound()
+        _stream_idx(tb, idxb, pos, ev)
+        pos += len(ev)
+        _row_gather(tb, table, np.sort(ev), stream.row_bytes, PC_IDX)
+        tb.compute(len(ev) * stream.compute_per_row)
+    mean_k = stream.rows_selected / stream.n_events
+    dense_bytes = stream.n_events * stream.n_rows * stream.row_bytes
+    return tb.build(dense_compute_scale=stream.n_rows / max(1.0, mean_k),
+                    dense_bytes=dense_bytes)
+
+
+# -- concrete adapters --------------------------------------------------------
+
+def kv_page_stream(name: str, n_pages: int, page_tokens: int, head_dim: int,
+                   dtype_bytes: int = 2) -> PageStream:
+    """Recorder for TopK sparse-KV decode: one row = one K+V page."""
+    row_bytes = 2 * page_tokens * head_dim * dtype_bytes   # K and V planes
+    comp = page_tokens * head_dim / MAC_RATE               # qk^T + pv MACs
+    return PageStream(name=name, n_rows=n_pages, row_bytes=row_bytes,
+                      compute_per_row=comp)
+
+
+def moe_expert_stream(expert_ids, n_experts: int, d_model: int, d_ff: int,
+                      dtype_bytes: int = 2, block_t: int = 16,
+                      tile_rows: int = 32,
+                      name: str = "MoE-route") -> PageStream:
+    """Convert an MoE routing decision into expert weight-tile traffic.
+
+    ``expert_ids`` are per-token routed experts (top-1 view of the routing
+    the MoE dispatch / ``group_tokens_by_expert`` consumes).  Tokens are
+    grouped per expert into ``block_t``-token blocks; each block streams a
+    ``tile_rows``-row tile of its expert's weight matrix — the
+    expert-blocked pattern of the paper's ST workload, but driven by real
+    routing instead of a synthetic zipf draw.
+    """
+    eids = np.asarray(expert_ids, dtype=np.int64).reshape(-1)
+    stream = PageStream(name=name, n_rows=n_experts * d_ff,
+                        row_bytes=d_model * dtype_bytes,
+                        compute_per_row=16 * d_model / MAC_RATE)
+    span = max(1, d_ff - tile_rows)
+    for e in range(n_experts):
+        count = int((eids == e).sum())
+        n_blocks = (count + block_t - 1) // block_t
+        for bi in range(n_blocks):
+            start = (bi * tile_rows) % span
+            rows = e * d_ff + start + np.arange(tile_rows, dtype=np.int64)
+            stream.record(rows)
+    return stream
+
+
+class PageCache:
+    """NSB hot-set model over page ids, backed by the shared
+    :class:`~.machine.Cache` (one fully-associative LRU set) — the same
+    memory-system model the simulator uses, replacing the serving
+    engine's ad-hoc ``HotSet`` LRU so the two layers cannot drift."""
+
+    def __init__(self, capacity_pages: int) -> None:
+        self.capacity = capacity_pages
+        self.cache = Cache(capacity_pages * LINE_BYTES,
+                           ways=capacity_pages, hit_latency=2.0,
+                           name="NSB-pages")
+        self._now = 0.0
+
+    def touch(self, page: int) -> bool:
+        """Access one page id; returns True on a hot-set hit."""
+        self._now += 1.0
+        t = self.cache.probe(int(page), self._now)
+        if t is None:
+            self.cache.fill(int(page), self._now)
+            self.cache.drain(self._now)   # install immediately
+            return False
+        return True
+
+    @property
+    def stats(self):
+        return self.cache.stats

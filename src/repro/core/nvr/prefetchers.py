@@ -22,18 +22,28 @@ Each prefetcher observes exactly what its hardware mechanism could observe:
   sparse unit, bundles prefetches into vector requests (VMIG) and issues
   them far ahead.  Coverage-oriented fuzzy-range loading adds a small
   deterministic over-fetch (accuracy < 100 %, coverage ≈ 100 %).
+
+Prefetchers subscribe to engine events (``on_vload`` fires when a vector
+load executes, ``on_miss`` when it demand-misses in L2) and read the
+compiled :class:`~.engine.vectrace.VecTrace` — per-op unique-line arrays
+are precomputed, so runahead scans never touch numpy.  New prefetchers
+self-register via :func:`~.engine.registry.register_prefetcher`.
 """
 
 from __future__ import annotations
 
-import numpy as np
+from types import MappingProxyType
 
+from .engine.registry import _REGISTRY, register_prefetcher
+from .engine.vectrace import KIND_COMPUTE, KIND_INDIRECT, VecTrace
 from .machine import LINE_BYTES, Hierarchy
-from .trace import Compute, Trace, VLoad
 
 
-def _lines(addrs: np.ndarray) -> np.ndarray:
-    return np.unique(addrs // LINE_BYTES)
+def bound_ok(bound_id: int, pc: int) -> bool:
+    """Deterministic boundary-speculation outcome for boundary-blind
+    runahead: ~72 % of cross-bound chains survive the fixed-trip-count
+    assumption."""
+    return (bound_id * 2654435761 + pc) % 100 < 72
 
 
 class Prefetcher:
@@ -51,43 +61,45 @@ class Prefetcher:
         hier.prefetch(int(line), now, into_nsb=into_nsb)
         return True
 
-    def on_vload(self, i: int, op: VLoad, trace: Trace, now: float,
+    def on_vload(self, i: int, vt: VecTrace, now: float,
                  hier: Hierarchy) -> None:  # pragma: no cover - interface
         pass
 
-    def on_miss(self, i: int, op: VLoad, trace: Trace, now: float,
+    def on_miss(self, i: int, vt: VecTrace, now: float,
                 hier: Hierarchy) -> None:  # pragma: no cover - interface
         pass
 
 
+@register_prefetcher("stream")
 class StreamPrefetcher(Prefetcher):
-    name = "stream"
 
     def __init__(self, depth: int = 4) -> None:
         super().__init__()
         self.depth = depth
         self.table: dict[int, tuple[int, int, int]] = {}  # pc -> (last, stride, conf)
 
-    def on_vload(self, i, op, trace, now, hier) -> None:
-        a0 = int(op.addrs[0])
-        span = int(op.addrs[-1]) - a0 + LINE_BYTES
-        last, stride, conf = self.table.get(op.pc, (a0, 0, 0))
+    def on_vload(self, i, vt, now, hier) -> None:
+        a0 = vt.addr_first[i]
+        span = vt.addr_last[i] - a0 + LINE_BYTES
+        pc = vt.pc[i]
+        last, stride, conf = self.table.get(pc, (a0, 0, 0))
         new_stride = a0 - last
         if new_stride == stride and stride != 0:
             conf = min(conf + 1, 3)
         else:
             conf = 0
-        self.table[op.pc] = (a0, new_stride, conf)
+        self.table[pc] = (a0, new_stride, conf)
         if conf >= 2:
+            cap = self.mshr_cap
             for k in range(1, self.depth + 1):
                 base = a0 + k * new_stride
-                for ln in range((base // LINE_BYTES),
-                                (base + span) // LINE_BYTES + 1):
-                    self._issue(hier, ln, now)
+                self.issued_lines += hier.prefetch_lines(
+                    range(base // LINE_BYTES,
+                          (base + span) // LINE_BYTES + 1), now, cap)
 
 
+@register_prefetcher("imp")
 class IMP(Prefetcher):
-    name = "imp"
     mshr_cap = 64
 
     def __init__(self, learn_after: int = 2, lookahead_ops: int = 40,
@@ -100,40 +112,43 @@ class IMP(Prefetcher):
         self.chains: dict[int, list[int]] = {}  # idx_pc -> learned gather PCs
         self.stream = StreamPrefetcher(depth=2)
 
-    def on_vload(self, i, op, trace, now, hier) -> None:
+    def on_vload(self, i, vt, now, hier) -> None:
         # stream component covers the index/weight streams themselves
         self.stream.issued_lines = self.issued_lines
-        self.stream.on_vload(i, op, trace, now, hier)
+        self.stream.on_vload(i, vt, now, hier)
         self.issued_lines = self.stream.issued_lines
-        if op.kind == "indirect":
-            self.observed[op.idx_pc] = self.observed.get(op.idx_pc, 0) + 1
-            learned = self.chains.setdefault(op.idx_pc, [])
+        kind = vt.kind
+        pc = vt.pc[i]
+        if kind[i] == KIND_INDIRECT:
+            ipc = vt.idx_pc[i]
+            self.observed[ipc] = self.observed.get(ipc, 0) + 1
+            learned = self.chains.setdefault(ipc, [])
             # limited pattern-table capacity: only the first ``max_chains``
             # (idx_pc -> gather_pc) mappings are captured — deep/multi-slice
             # chains exceed the IPT (the paper's §II-C criticism)
-            if op.pc not in learned and len(learned) < self.max_chains:
-                learned.append(op.pc)
+            if pc not in learned and len(learned) < self.max_chains:
+                learned.append(pc)
             return
         # an index stream load completed: prefetch this batch's gather
         # targets (the values just became architecturally visible)
-        pc = op.pc
         if self.observed.get(pc, 0) < self.learn_after:
             return
         learned = self.chains.get(pc, [])
-        bound = op.bound_id
-        for j in range(i + 1, min(len(trace.ops), i + 1 + self.lookahead_ops)):
-            nxt = trace.ops[j]
-            if isinstance(nxt, Compute):
+        bound = vt.bound[i]
+        for j in range(i + 1, min(vt.n_ops, i + 1 + self.lookahead_ops)):
+            kj = kind[j]
+            if kj == KIND_COMPUTE:
                 continue
-            if nxt.bound_id != bound:
+            if vt.bound[j] != bound:
                 break  # IMP has no loop-boundary knowledge beyond the batch
-            if nxt.kind == "indirect" and nxt.idx_pc == pc and nxt.pc in learned:
-                for ln in _lines(nxt.addrs):
-                    self._issue(hier, ln, now)
+            if kj == KIND_INDIRECT and vt.idx_pc[j] == pc \
+                    and vt.pc[j] in learned:
+                self.issued_lines += hier.prefetch_lines(
+                    vt.lines[j], now, self.mshr_cap)
 
 
+@register_prefetcher("dvr")
 class DVR(Prefetcher):
-    name = "dvr"
     mshr_cap = 128
 
     def __init__(self, window: int = 48, issue_width: int = 16) -> None:
@@ -141,39 +156,35 @@ class DVR(Prefetcher):
         self.window = window
         self.issue_width = issue_width
 
-    @staticmethod
-    def _bound_ok(op: VLoad) -> bool:
-        # deterministic boundary-speculation outcome: ~72 % of cross-bound
-        # chains survive the fixed-trip-count assumption
-        return (op.bound_id * 2654435761 + op.pc) % 100 < 72
-
-    def on_miss(self, i, op, trace, now, hier) -> None:
-        cur = op.bound_id
+    def on_miss(self, i, vt, now, hier) -> None:
+        cur = vt.bound[i]
         seen = 0
         t = now
-        for j in range(i + 1, len(trace.ops)):
+        kind, bound, lines = vt.kind, vt.bound, vt.lines
+        step = 1.0 / self.issue_width
+        for j in range(i + 1, vt.n_ops):
             if seen >= self.window:
                 break
-            nxt = trace.ops[j]
-            if isinstance(nxt, Compute):
+            if kind[j] == KIND_COMPUTE:
                 continue
             seen += 1
             # runahead issue rate: issue_width lines per cycle group
-            t += 1.0 / self.issue_width
-            if nxt.bound_id == cur or self._bound_ok(nxt):
-                for ln in _lines(nxt.addrs):
-                    self._issue(hier, ln, t)
+            t += step
+            if bound[j] == cur or bound_ok(bound[j], vt.pc[j]):
+                self.issued_lines += hier.prefetch_lines(
+                    lines[j], t, self.mshr_cap)
             else:
                 # boundary mispredict: junk prefetch past the row end
-                junk = int(nxt.addrs[-1] // LINE_BYTES) + 4
-                for k in range(min(4, len(nxt.addrs))):
-                    self._issue(hier, junk + k, t)
+                junk = vt.addr_last[j] // LINE_BYTES + 4
+                self.issued_lines += hier.prefetch_lines(
+                    range(junk, junk + min(4, vt.n_addrs[j])), t,
+                    self.mshr_cap)
 
 
+@register_prefetcher("nvr")
 class NVR(Prefetcher):
     """NPU Vector Runahead: SD + SCD + LBD + VMIG (+ optional NSB fill)."""
 
-    name = "nvr"
     mshr_cap = 256
 
     def __init__(self, depth: int = 96, fuzzy_every: int = 8,
@@ -201,43 +212,47 @@ class NVR(Prefetcher):
         self._near_until = -1
         self._fuzzy_ctr = 0
 
-    def on_vload(self, i, op, trace, now, hier) -> None:
+    def on_vload(self, i, vt, now, hier) -> None:
         # runahead entered when a load executes in the ROB (Q&A1): extend
         # coverage to [i, i+depth] — bounds are exact via LBD snooping.
         start = max(i + 1, self._covered_until + 1)
-        end = min(len(trace.ops), i + 1 + self.depth)
+        end = min(vt.n_ops, i + 1 + self.depth)
         t = now
-        cur_bound = op.bound_id
+        cur_bound = vt.bound[i]
+        kind, bound, all_lines = vt.kind, vt.bound, vt.lines
+        l2_mshr = hier.l2.mshr
         for j in range(start, end):
-            nxt = trace.ops[j]
-            if isinstance(nxt, Compute):
+            kj = kind[j]
+            if kj == KIND_COMPUTE:
                 self._covered_until = j
                 continue
-            if not self.scd and nxt.kind == "indirect":
+            if not self.scd and kj == KIND_INDIRECT:
                 self._covered_until = j   # chain unresolvable without SCD
                 continue
-            lines = _lines(nxt.addrs)
-            if len(hier.l2.mshr) + len(lines) > self.mshr_cap:
+            lines = all_lines[j]
+            if len(l2_mshr) + len(lines) > self.mshr_cap:
                 break  # MSHR-file full: resume next trigger (non-blocking)
             t += (1.0 / 16.0) if self.vmig else float(len(lines))
-            if not self.lbd and nxt.bound_id != cur_bound \
-                    and not DVR._bound_ok(nxt):
+            if not self.lbd and bound[j] != cur_bound \
+                    and not bound_ok(bound[j], vt.pc[j]):
                 # boundary-blind: mispredicted chain past the row end
-                junk = int(nxt.addrs[-1] // LINE_BYTES) + 4
-                for kk in range(min(4, len(lines))):
-                    self._issue(hier, junk + kk, t)
+                junk = vt.addr_last[j] // LINE_BYTES + 4
+                self.issued_lines += hier.prefetch_lines(
+                    range(junk, junk + min(4, len(lines))), t,
+                    self.mshr_cap)
                 self._covered_until = j
                 continue
-            for ln in lines:
-                self._issue(hier, ln, t)
-            if nxt.kind == "indirect":
+            self.issued_lines += hier.prefetch_lines(lines, t,
+                                                     self.mshr_cap)
+            if kj == KIND_INDIRECT:
                 # coverage-oriented fuzzy range loading: deterministic
                 # trailing-line over-fetch every ``fuzzy_every`` rows
                 # (fuzzy_every=0 disables — ablation knob)
                 self._fuzzy_ctr += 1
                 if self.fuzzy_every and \
                         self._fuzzy_ctr % self.fuzzy_every == 0:
-                    self._issue(hier, int(lines[-1]) + 1, t)
+                    self.issued_lines += hier.prefetch_lines(
+                        (lines[-1] + 1,), t, self.mshr_cap)
             self._covered_until = j
         if not self.fill_nsb:
             return
@@ -245,19 +260,15 @@ class NVR(Prefetcher):
         # the in-flight far prefetch) into the NSB — this is what cuts
         # NPU-to-L2 latency during actual load execution (paper §IV-G)
         nstart = max(i + 1, self._near_until + 1)
-        nend = min(len(trace.ops), i + 1 + self.near_depth)
+        nend = min(vt.n_ops, i + 1 + self.near_depth)
         for j in range(nstart, nend):
-            nxt = trace.ops[j]
             self._near_until = j
-            if isinstance(nxt, Compute) or nxt.kind != "indirect":
+            if kind[j] != KIND_INDIRECT:
                 continue
-            for ln in _lines(nxt.addrs):
-                self._issue(hier, ln, now, into_nsb=True)
+            self.issued_lines += hier.prefetch_lines(
+                all_lines[j], now, self.mshr_cap, into_nsb=True)
 
 
-PREFETCHERS = {
-    "stream": StreamPrefetcher,
-    "imp": IMP,
-    "dvr": DVR,
-    "nvr": NVR,
-}
+# live, read-only view of the registry kept for backwards compatibility
+# with the seed's hardcoded ``PREFETCHERS`` dict
+PREFETCHERS = MappingProxyType(_REGISTRY)

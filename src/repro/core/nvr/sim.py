@@ -1,4 +1,4 @@
-"""End-to-end NVR simulation driver + metrics.
+"""Simulation driver facade + Fig. 5 mode set.
 
 Execution modes (Fig. 5 bars):
   dense    — no sparsity skipping: regular streaming, perfectly prefetchable,
@@ -8,176 +8,38 @@ Execution modes (Fig. 5 bars):
              max(compute path, memory path).  Still suboptimal when IO-bound
              (the paper's point in §II-B).
   inorder + prefetcher — stream / imp / dvr / nvr, optional NSB.
+
+The timing loop itself lives in :mod:`.engine.core` (event-driven, driven
+by a structure-of-arrays compiled trace); this module keeps the seed's
+``simulate()`` / ``run_modes()`` call signatures as thin wrappers so
+existing call sites and notebooks keep working.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from .engine.config import (DMA_GRANULE_LINES, HIT_LAT, ISSUE, OOO_WINDOW,
+                            SimConfig)
+from .engine.core import SimEngine
+from .engine.result import SimResult, SweepResult
+from .trace import Trace
 
-import numpy as np
-
-from .machine import LINE_BYTES, Hierarchy, make_hierarchy
-from .prefetchers import PREFETCHERS, Prefetcher
-from .trace import Compute, Trace, VLoad
-
-ISSUE = 1.0     # cycles to issue a vector load
-HIT_LAT = 2.0   # scratchpad/L1-equivalent hit latency
-OOO_WINDOW = 8  # ideal-OoO outstanding vector loads (coarse-grained NPU ROB)
-DMA_GRANULE_LINES = 4  # rigid preload granularity without µ-inst prefetch
-
-
-@dataclass
-class SimResult:
-    workload: str
-    mode: str
-    dtype_bytes: int
-    nsb_kb: int
-    total: float
-    base: float
-    stall: float
-    compute: float
-    n_vloads: int
-    demand_misses: int
-    l2_accesses: int
-    demand_offchip: float
-    prefetch_offchip: float
-    pf_issued: int
-    pf_used: int
-    nsb_hits: int = 0
-    coverage: float = float("nan")  # filled by sweeps vs baseline
-
-    @property
-    def offchip(self) -> float:
-        return self.demand_offchip + self.prefetch_offchip
-
-    @property
-    def accuracy(self) -> float:
-        return self.pf_used / self.pf_issued if self.pf_issued else float("nan")
-
-    @property
-    def miss_rate(self) -> float:
-        return self.demand_misses / max(1, self.l2_accesses)
+__all__ = [
+    "DMA_GRANULE_LINES", "HIT_LAT", "ISSUE", "OOO_WINDOW",
+    "SimConfig", "SimEngine", "SimResult", "SweepResult",
+    "MODES_FIG5", "simulate", "run_modes",
+]
 
 
 def simulate(trace: Trace, mode: str = "inorder",
              prefetcher: str | None = None, l2_kb: int = 256,
              nsb_kb: int = 0, dram_latency: float = 150.0,
-             dram_bw: float = 16.0, pf_kwargs: dict | None = None) -> SimResult:
-    hier = make_hierarchy(l2_kb=l2_kb, nsb_kb=nsb_kb,
-                          dram_latency=dram_latency, dram_bw=dram_bw)
-    pf: Prefetcher | None = None
-    if prefetcher:
-        kwargs = dict(pf_kwargs or {})
-        if prefetcher == "nvr" and nsb_kb and "fill_nsb" not in kwargs:
-            # the NSB is a *speculative* buffer: NVR prefetches fill it
-            kwargs["fill_nsb"] = True
-        pf = PREFETCHERS[prefetcher](**kwargs)
-
-    if mode == "dense":
-        comp = trace.total_compute() * trace.dense_compute_scale
-        dense_bytes = trace.meta.get("dense_bytes",
-                                     trace.total_compute() * 64)
-        mem = dense_bytes / dram_bw + dram_latency
-        total = max(comp, mem)
-        return SimResult(trace.name, mode, 0, nsb_kb, total=total, base=comp,
-                         stall=total - comp, compute=comp, n_vloads=0,
-                         demand_misses=0, l2_accesses=0, demand_offchip=dense_bytes,
-                         prefetch_offchip=0.0, pf_issued=0, pf_used=0)
-
-    # without µ-inst-level (VMIG) restructuring, demand fetches happen at
-    # rigid scratchpad-DMA granularity (paper §II-B / §IV-F)
-    granule = 1 if pf is not None else DMA_GRANULE_LINES
-    t = 0.0
-    mem_ready = 0.0
-    base = 0.0
-    stall = 0.0
-    compute = 0.0
-    n_vloads = 0
-    window: list[float] = []  # OoO outstanding-load completion times
-    for i, op in enumerate(trace.ops):
-        if isinstance(op, Compute):
-            t += op.cycles
-            base += op.cycles
-            compute += op.cycles
-            continue
-        n_vloads += 1
-        hier.drain(t)
-        if pf is not None:
-            pf.on_vload(i, op, trace, t, hier)
-        lines = np.unique(op.addrs // LINE_BYTES)
-        indirect = op.kind == "indirect"
-        miss_before = hier.l2.stats.demand_misses
-        ready = t
-        for ln in lines:
-            ready = max(ready, hier.access(int(ln), t, indirect, granule))
-        if pf is not None and hier.l2.stats.demand_misses > miss_before:
-            pf.on_miss(i, op, trace, t, hier)
-        if mode == "inorder":
-            t0 = t + ISSUE + HIT_LAT
-            base += ISSUE + HIT_LAT
-            if ready > t0:
-                stall += ready - t0
-                t = ready
-            else:
-                t = t0
-        elif mode == "ooo":
-            t += ISSUE
-            base += ISSUE
-            window.append(ready)
-            if len(window) > OOO_WINDOW:
-                # coarse-grained ROB: the oldest outstanding vector load
-                # must retire before a new one can issue
-                blocker = window.pop(0)
-                if blocker > t:
-                    stall += blocker - t
-                    t = blocker
-            mem_ready = max(mem_ready, ready)
-        else:
-            raise ValueError(mode)
-    if mode == "ooo":
-        total = max(t, mem_ready)
-        stall = total - (base)
-    else:
-        total = t
-
-    pf_issued = (hier.l2.stats.prefetch_fills
-                 + (hier.nsb.stats.prefetch_fills if hier.nsb else 0))
-    pf_used = hier.l2.stats.prefetch_used
-    nsb_hits = 0
-    if hier.nsb is not None:
-        pf_used += hier.nsb.stats.prefetch_used
-        nsb_hits = hier.nsb.stats.hits
-    return SimResult(
-        workload=trace.name, mode=mode if not prefetcher else prefetcher,
-        dtype_bytes=0, nsb_kb=nsb_kb, total=total, base=base, stall=stall,
-        compute=compute, n_vloads=n_vloads,
-        demand_misses=hier.l2.stats.demand_misses,
-        l2_accesses=hier.l2.stats.accesses,
-        demand_offchip=hier.demand_offchip_bytes,
-        prefetch_offchip=hier.prefetch_offchip_bytes,
-        pf_issued=pf_issued, pf_used=pf_used, nsb_hits=nsb_hits)
-
-
-@dataclass
-class SweepResult:
-    rows: list = field(default_factory=list)
-
-    def add(self, r: SimResult) -> None:
-        self.rows.append(r)
-
-    def csv(self) -> str:
-        hdr = ("workload,mode,dtype_bytes,nsb_kb,total,base,stall,compute,"
-               "n_vloads,demand_misses,miss_rate,accuracy,coverage,"
-               "demand_offchip,prefetch_offchip,offchip")
-        out = [hdr]
-        for r in self.rows:
-            out.append(
-                f"{r.workload},{r.mode},{r.dtype_bytes},{r.nsb_kb},"
-                f"{r.total:.0f},{r.base:.0f},{r.stall:.0f},{r.compute:.0f},"
-                f"{r.n_vloads},{r.demand_misses},{r.miss_rate:.4f},"
-                f"{r.accuracy:.4f},{r.coverage:.4f},{r.demand_offchip:.0f},"
-                f"{r.prefetch_offchip:.0f},{r.offchip:.0f}")
-        return "\n".join(out)
+             dram_bw: float = 16.0, pf_kwargs: dict | None = None,
+             dtype_bytes: int = 0) -> SimResult:
+    """One run with the seed's keyword-argument surface."""
+    cfg = SimConfig(mode=mode, prefetcher=prefetcher, l2_kb=l2_kb,
+                    nsb_kb=nsb_kb, dram_latency=dram_latency,
+                    dram_bw=dram_bw, pf_kwargs=dict(pf_kwargs or {}))
+    return SimEngine(cfg).run(trace, dtype_bytes=dtype_bytes)
 
 
 MODES_FIG5 = ["dense", "inorder", "ooo", "stream", "imp", "dvr", "nvr"]
@@ -185,16 +47,20 @@ MODES_FIG5 = ["dense", "inorder", "ooo", "stream", "imp", "dvr", "nvr"]
 
 def run_modes(trace: Trace, dtype_bytes: int, nsb_kb: int = 0,
               l2_kb: int = 256) -> list[SimResult]:
-    """Run the full Fig. 5 mode set on one trace; annotates coverage."""
+    """Run the full Fig. 5 mode set on one trace; annotates coverage.
+
+    Results carry separate ``mode`` and ``prefetcher`` fields; key by
+    ``r.label`` to get the Fig. 5 bar names."""
     results = []
     baseline = None
     for mode in MODES_FIG5:
         if mode in ("dense", "inorder", "ooo"):
-            r = simulate(trace, mode=mode, l2_kb=l2_kb, nsb_kb=nsb_kb)
+            r = simulate(trace, mode=mode, l2_kb=l2_kb, nsb_kb=nsb_kb,
+                         dtype_bytes=dtype_bytes)
         else:
             r = simulate(trace, mode="inorder", prefetcher=mode,
-                         l2_kb=l2_kb, nsb_kb=nsb_kb)
-        r.dtype_bytes = dtype_bytes
+                         l2_kb=l2_kb, nsb_kb=nsb_kb,
+                         dtype_bytes=dtype_bytes)
         if mode == "inorder":
             baseline = r
         if baseline is not None and baseline.demand_misses:

@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
@@ -60,6 +61,25 @@ def select_pages(q: jax.Array, kpage: jax.Array, n_pages_valid: jax.Array,
     return idx.astype(jnp.int32)
 
 
+def select_pages_recorded(q: jax.Array, kpage: jax.Array,
+                          n_pages_valid: jax.Array, k_pages: int,
+                          stream) -> jax.Array:
+    """``select_pages`` + trace capture: records the concrete selection
+    into a :class:`repro.core.nvr.capture.PageStream` (one event per
+    (batch, kv-head) slot) so serving traffic can be replayed through the
+    NVR simulator.  Must run outside jit (the recorder needs values)."""
+    idx = select_pages(q, kpage, n_pages_valid, k_pages)
+    stream.record_batched(np.asarray(idx))
+    return idx
+
+
+def page_token_positions(idx: jax.Array, page: int) -> jax.Array:
+    """Absolute token positions ``[..., P, page]`` of the tokens inside
+    the selected pages ``idx [..., P]`` (shared by the attend variants
+    and the capture adapters)."""
+    return idx[..., None] * page + jnp.arange(page)
+
+
 def attend_pages(q: jax.Array, k: jax.Array, v: jax.Array, idx: jax.Array,
                  pos: jax.Array, page: int) -> jax.Array:
     """Attend q [B,KV,G,D] to gathered pages of k/v [B,S,KV,D].
@@ -77,7 +97,7 @@ def attend_pages(q: jax.Array, k: jax.Array, v: jax.Array, idx: jax.Array,
     vg = jnp.moveaxis(vp, 3, 1)[bi, hi, idx]
     scores = jnp.einsum("bkgd,bkptd->bkgpt", q.astype(jnp.float32),
                         kg.astype(jnp.float32)) / (d ** 0.5)
-    tok_pos = idx[..., None] * page + jnp.arange(page)[None, None, None, :]
+    tok_pos = page_token_positions(idx, page)
     mask = tok_pos <= pos                           # [B,KV,P,page]
     scores = jnp.where(mask[:, :, None], scores, -jnp.inf)
     bp, pt = scores.shape[-2], scores.shape[-1]
@@ -143,7 +163,7 @@ def sparse_decode_distributed(q, k, v, kpage, pos, *, page: int,
         vg = jnp.moveaxis(vpg, 3, 1)[bi, hi, idx]
         sc = jnp.einsum("bkgd,bkptd->bkgpt", qv.astype(jnp.float32),
                         kg.astype(jnp.float32)) / (d ** 0.5)
-        tok = start + idx[..., None] * page + jnp.arange(page)[None, None, None]
+        tok = start + page_token_positions(idx, page)
         mask = tok <= posv
         sc = jnp.where(mask[:, :, None], sc, -jnp.inf)
         flat = sc.reshape(*sc.shape[:3], -1)
@@ -206,7 +226,7 @@ def attend_pages_full(q, k_full, v_full, li, idx, pos, page: int):
     vg = kv_dequant_f32(gather_pages_full(v_full, li, idx, page))
     scores = jnp.einsum("bkgd,bkptd->bkgpt", q.astype(jnp.float32),
                         kg) / (d ** 0.5)
-    tok_pos = idx[..., None] * page + jnp.arange(page)[None, None, None, :]
+    tok_pos = page_token_positions(idx, page)
     mask = tok_pos <= pos
     scores = jnp.where(mask[:, :, None], scores, -jnp.inf)
     bp, pt = scores.shape[-2], scores.shape[-1]
@@ -256,8 +276,7 @@ def sparse_decode_distributed_full(q, k_full, v_full, kpage_li, li, pos, *,
         vg = kv_dequant_f32(gather_pages_full(vl, liv, idx, page))
         sc = jnp.einsum("bkgd,bkptd->bkgpt", qv.astype(jnp.float32),
                         kg) / (d ** 0.5)
-        tok = start + idx[..., None] * page + jnp.arange(page)[None, None,
-                                                              None]
+        tok = start + page_token_positions(idx, page)
         mask = tok <= posv
         sc = jnp.where(mask[:, :, None], sc, -jnp.inf)
         flat = sc.reshape(*sc.shape[:3], -1)

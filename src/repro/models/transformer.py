@@ -218,8 +218,9 @@ def decode_step(params: Params, cfg, cache: dict, token, *, pos3=None,
         if dist is None:
             return arr
         from jax.sharding import PartitionSpec as P
-        ax = jax.sharding.get_abstract_mesh()
-        if ax is None or not ax.shape:
+
+        from .. import sharding as _sh
+        if not _sh._mesh_axes():
             return arr
         return jax.lax.with_sharding_constraint(arr, P(*dims_spec))
 

@@ -4,23 +4,34 @@ Request lifecycle: enqueue -> batched prefill -> step-wise decode with
 TopK-page sparse attention (the paper's Double-Sparsity/H2O use case).
 
 The engine tracks per-step *page traffic* — which KV pages the selection
-touched — and maintains an NSB-style hot-set model (capacity-bounded LRU of
-recently used pages).  ``stats()`` reports the measured page-reuse rate and
-the implied off-chip fetch reduction, mirroring Fig. 6(c)/Fig. 8 of the
-paper at the serving layer (this container is CPU-only, so these are
-traffic counts, not wall-clock).
+touched — and scores it against an NSB model.  The NSB accounting is
+backed by the shared simulator memory model
+(:class:`repro.core.nvr.capture.PageCache`, a fully-associative
+:class:`repro.core.nvr.machine.Cache` over page ids), so the serving layer
+and the cycle-level simulator share one notion of hot-set reuse instead of
+two implementations that can drift.  ``stats()`` reports the measured
+page-reuse rate and the implied off-chip fetch reduction, mirroring
+Fig. 6(c)/Fig. 8 of the paper at the serving layer (this container is
+CPU-only, so these are traffic counts, not wall-clock).
+
+With ``capture_trace=True`` the engine additionally records every TopK
+page selection into a :class:`~repro.core.nvr.capture.PageStream`;
+``captured_trace()`` lowers the recorded traffic into a simulator
+``Trace``, closing the capture -> simulate loop: a real decode run can be
+replayed under inorder/ooo/stream/imp/dvr/nvr to see what NVR buys on
+*this* traffic rather than on a synthetic generator.
 """
 
 from __future__ import annotations
 
-from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.nvr import capture
 from ..models import api, sparse_attention, transformer
 
 
@@ -44,33 +55,25 @@ class ServeStats:
         return self.hot_hit_rate
 
 
-class HotSet:
-    """NSB model: capacity-bounded LRU over (layer-agnostic) page ids."""
-
-    def __init__(self, capacity_pages: int) -> None:
-        self.capacity = capacity_pages
-        self.lru: OrderedDict = OrderedDict()
-
-    def touch(self, page: int) -> bool:
-        hit = page in self.lru
-        if hit:
-            self.lru.move_to_end(page)
-        else:
-            self.lru[page] = True
-            if len(self.lru) > self.capacity:
-                self.lru.popitem(last=False)
-        return hit
-
-
 class Engine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 1024,
-                 sparse: bool = True, nsb_pages: int = 64) -> None:
+                 sparse: bool = True, nsb_pages: int = 64,
+                 capture_trace: bool = False,
+                 kv_dtype_bytes: int = 2) -> None:
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.sparse = sparse and cfg.sparse_kv
         self.stats = ServeStats()
-        self.hot = HotSet(nsb_pages)
+        # NSB hot-set accounting on the shared simulator cache model
+        self.hot = capture.PageCache(nsb_pages)
+        self._seen_pages: set[int] = set()
+        self.recorder = None
+        if capture_trace and self.sparse:
+            self.recorder = capture.kv_page_stream(
+                f"serve-{cfg.name}", n_pages=max_len // cfg.kv_page,
+                page_tokens=cfg.kv_page, head_dim=cfg.hd,
+                dtype_bytes=kv_dtype_bytes)
         self._decode = jax.jit(
             lambda p, c, t: api.decode_fn(cfg, p, c, t, sparse=self.sparse))
         self.cache = None
@@ -113,9 +116,16 @@ class Engine:
                       cfg.hd), kp0.dtype)
         n_valid = cache["pos"] // cfg.kv_page + 1
         k_pages = min(cfg.kv_topk_pages, kp0.shape[1])
-        idx = np.asarray(sparse_attention.select_pages(
-            q, kp0, n_valid, k_pages))
-        for p in np.unique(idx):
+        if self.recorder is not None:
+            idx = np.asarray(sparse_attention.select_pages_recorded(
+                q, kp0, n_valid, k_pages, self.recorder))
+        else:
+            idx = np.asarray(sparse_attention.select_pages(
+                q, kp0, n_valid, k_pages))
+        uniq = np.unique(idx)
+        self._seen_pages.update(int(p) for p in uniq)
+        self.stats.pages_unique = len(self._seen_pages)  # run footprint
+        for p in uniq:
             self.stats.pages_touched += 1
             if self.hot.touch(int(p)):
                 self.stats.nsb_hits += 1
@@ -137,3 +147,13 @@ class Engine:
         for _ in range(n_steps - 1):
             toks.append(self.step())
         return np.stack([np.asarray(t) for t in toks], axis=1)
+
+    def captured_trace(self):
+        """The decode run's recorded page traffic as a simulator Trace
+        (requires ``capture_trace=True`` and at least one sparse step)."""
+        if self.recorder is None:
+            raise RuntimeError(
+                "no trace recorder: construct the Engine with "
+                "capture_trace=True AND the sparse-KV path enabled "
+                "(sparse=True and cfg.sparse_kv) to record selections")
+        return self.recorder.to_trace()

@@ -50,11 +50,23 @@ def get_rules() -> dict:
     return dict(_rules)
 
 
+def _get_abstract_mesh():
+    # jax >= 0.5 exposes this at jax.sharding; 0.4.3x only at jax._src.mesh
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        from jax._src import mesh as _mesh_mod
+        fn = getattr(_mesh_mod, "get_abstract_mesh", None)
+    return fn() if fn is not None else None
+
+
 def _mesh_axes() -> dict:
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or not m.shape:
+    try:
+        m = _get_abstract_mesh()
+    except Exception:
         return {}
-    return dict(m.shape)
+    # unset contexts read back as None (>=0.5) or an empty tuple (0.4.3x)
+    shape = getattr(m, "shape", None)
+    return dict(shape) if shape else {}
 
 
 def resolve(*logical, mesh_axes: dict | None = None) -> P:

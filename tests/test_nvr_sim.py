@@ -90,7 +90,7 @@ class TestPaperClaims:
         out = {}
         for wl in ALL:
             tr = make_trace(wl, dtype_bytes=2, scale=0.5)
-            out[wl] = {r.mode: r for r in run_modes(tr, 2)}
+            out[wl] = {r.label: r for r in run_modes(tr, 2)}
         return out
 
     def test_nvr_speedup_vs_no_prefetch(self, results):
@@ -137,7 +137,7 @@ class TestPaperClaims:
 
 def test_ooo_between_inorder_and_nvr():
     tr = make_trace("DS", dtype_bytes=2, scale=0.5)
-    rs = {r.mode: r for r in run_modes(tr, 2)}
+    rs = {r.label: r for r in run_modes(tr, 2)}
     assert rs["nvr"].total < rs["ooo"].total < rs["inorder"].total
 
 

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency; "
+                    "install with pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.nvr.machine import Cache, DRAM, LINE_BYTES
 from repro.kernels import coalesce_indices, ops
