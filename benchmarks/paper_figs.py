@@ -396,6 +396,14 @@ def capture_roundtrip():
     return rows, headline
 
 
+def serve_bench():
+    """Continuous-batching Poisson load vs the single-batch baseline
+    (defined in benchmarks/serve_bench.py; imported lazily so the numpy-
+    only figures stay importable without jax)."""
+    from .serve_bench import serve_bench as _sb
+    return _sb()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -407,4 +415,5 @@ ALL = {
     "engine_speedup": engine_speedup,  # engine vs frozen seed loop
     "sweep_grid": sweep_grid,          # grid sweep runner + artifacts
     "capture_roundtrip": capture_roundtrip,  # serve/MoE capture -> sim
+    "serve_bench": serve_bench,        # continuous batching vs lockstep
 }

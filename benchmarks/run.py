@@ -5,34 +5,56 @@ per-figure headline metrics vs the paper's claims.  Detailed per-row
 artifacts (paired CSV + JSON, via the engine sweep runner's writer) land
 in benchmarks/results/.
 
-Beyond the paper figures, three engineering benches ride along:
+Beyond the paper figures, four engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
                       the sweep runner (CSV + JSON artifacts)
   capture_roundtrip — replay *captured* serving/MoE traffic through the
                       simulator (needs jax; all paper figs are numpy-only)
+  serve_bench       — continuous-batching Poisson load vs the single-batch
+                      baseline, with multi-tenant capture -> NVR replay
+
+Exit status: 0 only if every requested benchmark ran clean; a benchmark
+that raises is reported (traceback + summary line) and the process exits
+1 after the remaining benchmarks finish, so CI smoke jobs fail loudly
+instead of swallowing a broken figure.  Unknown names exit 2.
 
   PYTHONPATH=src python -m benchmarks.run            # all figures
   BENCH_SCALE=1.0 PYTHONPATH=src python -m benchmarks.run fig5_latency
-  PYTHONPATH=src python -m benchmarks.run engine_speedup sweep_grid
+  PYTHONPATH=src python -m benchmarks.run engine_speedup serve_bench
 """
 
 from __future__ import annotations
 
 import sys
 import time
+import traceback
 
 
-def main() -> None:
+def main(argv=None) -> int:
     from . import paper_figs
-    names = sys.argv[1:] or list(paper_figs.ALL)
+    names = list(argv if argv is not None else sys.argv[1:]) \
+        or list(paper_figs.ALL)
+    unknown = [n for n in names if n not in paper_figs.ALL]
+    if unknown:
+        print(f"unknown benchmark(s): {', '.join(unknown)}",
+              file=sys.stderr)
+        print(f"available: {', '.join(paper_figs.ALL)}", file=sys.stderr)
+        return 2
     print("name,us_per_call,derived")
     summaries = []
+    failures = []
     for name in names:
         fn = paper_figs.ALL[name]
         t0 = time.perf_counter()
-        rows, headline = fn()
+        try:
+            rows, headline = fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"{name},FAILED,")
+            continue
         us = (time.perf_counter() - t0) * 1e6
         derived = ";".join(f"{k}={v:.4g}" if isinstance(v, float)
                            else f"{k}={v}" for k, v in headline.items()
@@ -48,7 +70,11 @@ def main() -> None:
             else:
                 print(f"    {k:38s} {v:.4g}" if isinstance(v, float)
                       else f"    {k:38s} {v}")
+    if failures:
+        print(f"\nFAILED: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -7,8 +7,7 @@ are ShapeCells.  ``reduced()`` yields the CPU smoke-test variant.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

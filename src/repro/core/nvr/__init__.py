@@ -14,7 +14,8 @@ from .engine.vectrace import VecTrace
 from .machine import Cache, DRAM, Hierarchy, make_hierarchy, LINE_BYTES
 from .prefetchers import (DVR, IMP, NVR, PREFETCHERS, Prefetcher,
                           StreamPrefetcher)
-from .sim import MODES_FIG5, SimResult, SweepResult, run_modes, simulate
+from .sim import (MODES_FIG5, SimResult, SweepResult, demand_miss_reduction,
+                  demand_miss_reduction_from, run_modes, simulate)
 from .trace import Compute, Trace, TraceBuilder, VLoad
 from .traces import WORKLOADS, make_trace
 
@@ -25,6 +26,7 @@ __all__ = [
     "write_artifacts", "VecTrace",
     "Cache", "DRAM", "Hierarchy", "make_hierarchy", "LINE_BYTES",
     "DVR", "IMP", "NVR", "PREFETCHERS", "Prefetcher", "StreamPrefetcher",
-    "MODES_FIG5", "SimResult", "SweepResult", "run_modes", "simulate",
+    "MODES_FIG5", "SimResult", "SweepResult", "demand_miss_reduction",
+    "demand_miss_reduction_from", "run_modes", "simulate",
     "Compute", "Trace", "TraceBuilder", "VLoad", "WORKLOADS", "make_trace",
 ]

@@ -40,6 +40,12 @@ class PageStream:
     ``events`` is a list of int arrays; each array holds the row ids one
     selection event touched (one decode step for one (batch, head) slot,
     one routed token block, ...).
+
+    Multi-tenant traffic is tagged: ``rids[i]`` / ``steps[i]`` carry the
+    request id and scheduler iteration that produced ``events[i]`` (-1
+    when untagged, e.g. single-batch capture).  Tags are metadata only —
+    ``to_trace`` lowers events in recorded order, so a continuous-batching
+    engine's interleaving is exactly what the simulator replays.
     """
 
     name: str
@@ -47,19 +53,25 @@ class PageStream:
     row_bytes: int          # bytes gathered per selected row
     compute_per_row: float  # compute cycles per gathered row
     events: list = field(default_factory=list)
+    rids: list = field(default_factory=list)
+    steps: list = field(default_factory=list)
 
-    def record(self, idx) -> None:
+    def record(self, idx, *, rid: int = -1, step: int = -1) -> None:
         """Record one selection event (any int array-like of row ids)."""
         arr = np.asarray(idx, dtype=np.int64).reshape(-1)
         if arr.size:
             self.events.append(arr)
+            self.rids.append(int(rid))
+            self.steps.append(int(step))
 
-    def record_batched(self, idx) -> None:
+    def record_batched(self, idx, *, rid: int = -1, step: int = -1) -> None:
         """Record ``idx[..., K]`` as one event per leading slot — e.g. a
         ``[B, KV, K]`` TopK selection becomes ``B*KV`` events."""
         arr = np.asarray(idx, dtype=np.int64)
         for row in arr.reshape(-1, arr.shape[-1]):
             self.events.append(row.copy())
+            self.rids.append(int(rid))
+            self.steps.append(int(step))
 
     @property
     def n_events(self) -> int:
@@ -68,6 +80,41 @@ class PageStream:
     @property
     def rows_selected(self) -> int:
         return sum(len(e) for e in self.events)
+
+    # -- multi-request views -------------------------------------------------
+
+    def request_ids(self) -> list:
+        """Distinct request tags in first-appearance order (without -1)."""
+        seen: dict = {}
+        for r in self.rids:
+            if r >= 0 and r not in seen:
+                seen[r] = None
+        return list(seen)
+
+    def events_for(self, rid: int) -> list:
+        """One request's events as ``(step, row-id array)`` in order."""
+        return [(s, e) for e, r, s in zip(self.events, self.rids,
+                                          self.steps) if r == rid]
+
+    def subset(self, rid: int) -> "PageStream":
+        """A single request's traffic as its own stream (same table)."""
+        sub = PageStream(name=f"{self.name}/r{rid}", n_rows=self.n_rows,
+                         row_bytes=self.row_bytes,
+                         compute_per_row=self.compute_per_row)
+        for step, ev in self.events_for(rid):
+            sub.record(ev, rid=rid, step=step)
+        return sub
+
+    def interleave_spans(self) -> dict:
+        """Per-request (first, last) positions in the recorded order —
+        overlapping spans mean the requests' traffic interleaves."""
+        spans: dict = {}
+        for i, r in enumerate(self.rids):
+            if r < 0:
+                continue
+            first, _ = spans.get(r, (i, i))
+            spans[r] = (first, i)
+        return spans
 
     def to_trace(self) -> Trace:
         return to_trace(self)

@@ -26,7 +26,8 @@ from .trace import Trace
 __all__ = [
     "DMA_GRANULE_LINES", "HIT_LAT", "ISSUE", "OOO_WINDOW",
     "SimConfig", "SimEngine", "SimResult", "SweepResult",
-    "MODES_FIG5", "simulate", "run_modes",
+    "MODES_FIG5", "simulate", "run_modes", "demand_miss_reduction",
+    "demand_miss_reduction_from",
 ]
 
 
@@ -43,6 +44,30 @@ def simulate(trace: Trace, mode: str = "inorder",
 
 
 MODES_FIG5 = ["dense", "inorder", "ooo", "stream", "imp", "dvr", "nvr"]
+
+
+def demand_miss_reduction_from(results, target: str = "nvr",
+                               baseline: str = "inorder") -> float:
+    """Miss-reduction metric over an existing ``run_modes`` result set
+    (list of SimResults or a label->SimResult dict) — call sites that
+    already ran the mode sweep reuse it instead of simulating twice."""
+    rs = results if isinstance(results, dict) \
+        else {r.label: r for r in results}
+    ino = rs[baseline]
+    if not ino.demand_misses:
+        return 0.0
+    return 1.0 - rs[target].demand_misses / ino.demand_misses
+
+
+def demand_miss_reduction(trace: Trace, dtype_bytes: int = 2,
+                          target: str = "nvr",
+                          baseline: str = "inorder") -> float:
+    """Fraction of the baseline's demand misses ``target`` eliminates on
+    this trace (0.0 when the baseline never misses).  The one shared
+    definition the serving launcher, serve_bench, and capture replays
+    report, so they cannot drift."""
+    return demand_miss_reduction_from(run_modes(trace, dtype_bytes),
+                                      target=target, baseline=baseline)
 
 
 def run_modes(trace: Trace, dtype_bytes: int, nsb_kb: int = 0,

@@ -7,13 +7,10 @@ Mosaic.  Every op has a pure-jnp oracle in ``ref.py``.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ref
 from .gather_rows import gather_rows as _gather_rows
 from .gather_spmm import gather_spmm as _gather_spmm
 from .moe_dispatch import moe_dispatch_matmul as _moe_dispatch_matmul

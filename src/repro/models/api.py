@@ -9,11 +9,8 @@ materialises small concrete batches for smoke tests.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ArchConfig, ShapeCell
 from . import encdec, hybrid, ssm, transformer, vlm

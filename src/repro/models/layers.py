@@ -9,12 +9,10 @@ dry-run of 80-94-layer models.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 Params = dict
 

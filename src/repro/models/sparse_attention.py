@@ -16,8 +16,6 @@ philosophy, applied across chips).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -309,6 +307,92 @@ def sparse_decode_distributed_full(q, k_full, v_full, kpage_li, li, pos, *,
                   P(bspec, sspec, kspec, None), P(), P()),
         out_specs=P(bspec, kspec, None, None), check_rep=False)(
             q, k_full, v_full, kpage_li, li, pos)
+
+
+# -- block-table-indexed ("paged") variants ------------------------------------
+#
+# Continuous-batching serve path: the KV cache is a pool of physical pages
+# shared by all requests; each request maps logical page j -> physical page
+# bt[j].  Selection scores logical pages from the physical page-summary
+# pool and returns BOTH index spaces: logical ids feed the causal masking
+# (absolute token positions), physical ids feed the gather — and are the
+# very ids the KV allocator, the NSB hot-set model (capture.PageCache),
+# and the captured simulator trace account in.
+
+def select_pages_blocktable(q: jax.Array, kpage_pool_li: jax.Array,
+                            block_table: jax.Array, n_pages_valid: jax.Array,
+                            k_pages: int) -> tuple[jax.Array, jax.Array]:
+    """TopK pages through a block table.
+
+    q [R,KV,G,D]; kpage_pool_li [P,KV,D] (physical page summaries, one
+    layer); block_table [R,NL] physical ids (NULL-padded); n_pages_valid
+    [R].  Returns (logical idx [R,KV,K], physical idx [R,KV,K]).
+    """
+    kp = kpage_pool_li[block_table]                 # [R,NL,KV,D]
+    s = page_scores(q, kp)                          # [R,KV,NL]
+    nl = s.shape[-1]
+    valid = jnp.arange(nl)[None, None, :] < n_pages_valid[:, None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    _, idx = jax.lax.top_k(s, k_pages)
+    idx = idx.astype(jnp.int32)
+    bt_b = jnp.broadcast_to(block_table[:, None, :],
+                            (idx.shape[0], idx.shape[1], nl))
+    phys = jnp.take_along_axis(bt_b, idx, axis=-1).astype(jnp.int32)
+    return idx, phys
+
+
+def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
+                       v_pool_li: jax.Array, idx: jax.Array,
+                       phys: jax.Array, pos: jax.Array,
+                       page: int) -> jax.Array:
+    """Attend q [R,KV,G,D] to physically-gathered pages.
+
+    k_pool_li / v_pool_li [P,page,KV,D] (one layer of the pool); idx
+    [R,KV,K] logical page ids (for position masking), phys [R,KV,K]
+    physical page ids (for the gather); pos [R] per-request frontier.
+    Fully-masked rows (padded batch slots) produce zeros, not NaNs.
+    """
+    kv = k_pool_li.shape[2]
+    hi = jnp.arange(kv)[None, :, None]
+    # advanced indices (phys [R,KV,K], head [1,KV,1]) broadcast together,
+    # picking each KV head's own selected pages: [R,KV,K,page,D]
+    kg = kv_dequant_f32(k_pool_li[phys, :, hi])
+    vg = kv_dequant_f32(v_pool_li[phys, :, hi])
+    d = q.shape[-1]
+    scores = jnp.einsum("bkgd,bkptd->bkgpt", q.astype(jnp.float32),
+                        kg) / (d ** 0.5)
+    tok_pos = page_token_positions(idx, page)       # [R,KV,K,page]
+    mask = tok_pos <= pos[:, None, None, None]
+    scores = jnp.where(mask[:, :, None], scores, -jnp.inf)
+    bp, pt = scores.shape[-2], scores.shape[-1]
+    flat = scores.reshape(*scores.shape[:-2], bp * pt)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(flat - m)
+    p = jnp.where(jnp.isfinite(flat), p, 0.0)
+    w = (p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+         ).reshape(scores.shape)
+    out = jnp.einsum("bkgpt,bkptd->bkgd", w, vg)
+    return out.astype(q.dtype)
+
+
+def page_summary_from_pool(k_pool_li: jax.Array, phys: jax.Array,
+                           n_tokens: jax.Array) -> jax.Array:
+    """Exact label-cache entries for pool pages: mean of the first
+    ``n_tokens`` keys of each page ``phys``.
+
+    k_pool_li [P,page,KV,D]; phys [M]; n_tokens [M] (>=1).  Returns
+    [M,KV,D].  Both the chunked-prefill and the paged-decode paths
+    recompute summaries through this one function so the selection
+    scores cannot drift between the two (preemption-recompute relies on
+    bitwise-identical replay).
+    """
+    rows = kv_dequant_f32(k_pool_li[phys])          # [M,page,KV,D]
+    page = rows.shape[1]
+    tmask = (jnp.arange(page)[None, :, None, None]
+             < n_tokens[:, None, None, None])
+    cnt = jnp.maximum(n_tokens, 1).astype(jnp.float32)
+    return (rows * tmask).sum(axis=1) / cnt[:, None, None]
 
 
 def update_page_summary(kpage: jax.Array, k_new: jax.Array, pos: jax.Array,

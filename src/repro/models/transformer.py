@@ -8,8 +8,6 @@ init_cache, decode_step (dense or TopK-sparse KV — the paper's technique).
 from __future__ import annotations
 
 import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -156,7 +154,6 @@ def prefill(params: Params, cfg, tokens, *, input_embeds=None, pos3=None,
                           pos3=pos3, collect_kv=True, remat=remat,
                           unroll=unroll)
     k, v = kvs
-    b = hidden.shape[0]
     s = k.shape[2]
     cache = make_cache(cfg, k, v, s)
     return logits_last(params, cfg, hidden), cache

@@ -7,7 +7,6 @@ positions; text continues with sequential t positions after the grid.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import transformer

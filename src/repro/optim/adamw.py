@@ -8,7 +8,6 @@ the ≥100B archs (recorded as a §Perf memory-term lever).
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

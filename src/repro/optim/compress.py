@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:

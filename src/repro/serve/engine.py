@@ -1,29 +1,45 @@
-"""Batched serving engine with NVR sparse-KV decode.
+"""Serving engines with NVR sparse-KV decode.
 
-Request lifecycle: enqueue -> batched prefill -> step-wise decode with
-TopK-page sparse attention (the paper's Double-Sparsity/H2O use case).
+Two engines share one memory-system story:
 
-The engine tracks per-step *page traffic* — which KV pages the selection
-touched — and scores it against an NSB model.  The NSB accounting is
-backed by the shared simulator memory model
-(:class:`repro.core.nvr.capture.PageCache`, a fully-associative
-:class:`repro.core.nvr.machine.Cache` over page ids), so the serving layer
-and the cycle-level simulator share one notion of hot-set reuse instead of
-two implementations that can drift.  ``stats()`` reports the measured
-page-reuse rate and the implied off-chip fetch reduction, mirroring
-Fig. 6(c)/Fig. 8 of the paper at the serving layer (this container is
-CPU-only, so these are traffic counts, not wall-clock).
+:class:`Engine` — the single-batch baseline.  One fixed batch prefills
+together and decodes in lockstep; no new request joins until the batch
+drains.  Kept as the reference point ``benchmarks/serve_bench.py``
+measures continuous batching against.
 
-With ``capture_trace=True`` the engine additionally records every TopK
-page selection into a :class:`~repro.core.nvr.capture.PageStream`;
-``captured_trace()`` lowers the recorded traffic into a simulator
-``Trace``, closing the capture -> simulate loop: a real decode run can be
-replayed under inorder/ooo/stream/imp/dvr/nvr to see what NVR buys on
-*this* traffic rather than on a synthetic generator.
+:class:`PagedEngine` — the continuous-batching engine.  Requests arrive
+through an admission queue (:mod:`.scheduler`), an iteration-level
+scheduler mixes prefill chunks and decode steps under a token budget, and
+the KV cache is a pool of physical pages managed by
+:class:`.kv_allocator.KVBlockAllocator` (block table per request,
+free-list, preempt-and-evict under pressure).  The *physical page id* is
+the shared currency across layers: the TopK paged-attention gather
+(``sparse_attention.select_pages_blocktable``), the NSB hot-set
+accounting (``capture.PageCache``), and the captured simulator trace
+(``capture.PageStream`` with request/step tags) all account in the
+allocator's page ids, so eviction policy, hot-set reuse, and NVR
+prefetch simulation see one memory model.
+
+Preemption uses the recompute policy, engineered for *bitwise-identical*
+resume: prompts re-prefill through the same chunk schedule, and
+already-generated tokens *replay* through the decode path (teacher
+forcing), so the same jitted functions see the same inputs and the
+request's logits are reproduced exactly.
+
+Per-step page traffic is scored against the NSB model, and with
+``capture_trace=True`` each decode step's *layer-0* TopK selection (the
+same layer-0 traffic proxy the single-batch engine uses, but computed
+from the real decode queries) is recorded, tagged with request id and
+scheduler iteration, into a
+:class:`~repro.core.nvr.capture.PageStream`; ``captured_trace()`` lowers
+it to a simulator ``Trace``, so multi-tenant serving traffic — not a
+synthetic generator — drives the NVR/inorder comparison.  This container
+is CPU-only: reported rates are traffic counts, not wall-clock.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 
 import jax
@@ -33,6 +49,18 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.nvr import capture
 from ..models import api, sparse_attention, transformer
+from ..models import layers as mlayers
+from .kv_allocator import NULL_PAGE, KVBlockAllocator, PagePoolConfig
+from .scheduler import PrefillJob, Request, Scheduler
+
+
+def percentile(xs, q: float) -> float:
+    """Nearest-rank percentile (the one definition engine metrics and
+    serve_bench share)."""
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    return float(xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))])
 
 
 @dataclass
@@ -56,6 +84,8 @@ class ServeStats:
 
 
 class Engine:
+    """Single-batch baseline: batched prefill + lockstep sparse decode."""
+
     def __init__(self, cfg: ArchConfig, params, max_len: int = 1024,
                  sparse: bool = True, nsb_pages: int = 64,
                  capture_trace: bool = False,
@@ -157,3 +187,364 @@ class Engine:
                 "capture_trace=True AND the sparse-KV path enabled "
                 "(sparse=True and cfg.sparse_kv) to record selections")
         return self.recorder.to_trace()
+
+
+# -- continuous batching -------------------------------------------------------
+
+@dataclass
+class PagedServeStats(ServeStats):
+    iterations: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    preemptions: int = 0
+    finished: int = 0
+
+
+def _paged_decode_fn(cfg: ArchConfig):
+    """Build the jitted ragged decode step over the physical page pools.
+
+    One call advances R requests by one token each: per-request positions
+    (no lockstep), KV written through the block table into physical
+    pages, page summaries recomputed exactly, TopK selection + gather by
+    physical page id.  Padded rows carry block table NULLs and scribble
+    the reserved scratch page 0.
+    """
+    page = cfg.kv_page
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def fn(params, k_pool, v_pool, s_pool, token, pos, bt):
+        r = token.shape[0]
+        nl = bt.shape[1]
+        k_sel = int(min(cfg.kv_topk_pages, nl))
+        x = jnp.take(params["embed"], token[:, None], axis=0).astype(dt)
+        if getattr(cfg, "scale_embed", False):
+            x = x * (cfg.d_model ** 0.5)
+        pos_arr = pos[:, None]                       # [R,1]
+        lp_w = pos // page
+        off = pos % page
+        phys_w = jnp.take_along_axis(bt, lp_w[:, None], axis=1)[:, 0]
+        n_valid = lp_w + 1
+        lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        g = cfg.n_heads // cfg.n_kv_heads
+
+        def body(carry, lp_li):
+            xc, kp_, vp_, sp_ = carry
+            lp, li = lp_li
+            h = mlayers.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            q, k_new, v_new = mlayers.gqa_project(h, lp, cfg)
+            q = mlayers.apply_rope(q, pos_arr, cfg.rope_theta)
+            k_new = mlayers.apply_rope(k_new, pos_arr, cfg.rope_theta)
+            kq = sparse_attention.kv_quant(k_new[:, 0], kp_.dtype)
+            vq = sparse_attention.kv_quant(v_new[:, 0], vp_.dtype)
+            kp_ = kp_.at[li, phys_w, off].set(kq)
+            vp_ = vp_.at[li, phys_w, off].set(vq)
+            summ = sparse_attention.page_summary_from_pool(
+                kp_[li], phys_w, off + 1)
+            sp_ = sp_.at[li, phys_w].set(summ)
+            qh = q.reshape(r, cfg.n_kv_heads, g, cfg.hd)
+            idx, phys = sparse_attention.select_pages_blocktable(
+                qh, sp_[li], bt, n_valid, k_sel)
+            o = sparse_attention.attend_pages_paged(
+                qh, kp_[li], vp_[li], idx, phys, pos, page)
+            o = o.reshape(r, 1, cfg.n_heads, cfg.hd)
+            xc = xc + mlayers.attn_out(o, lp, cfg.d_model)
+            h2 = mlayers.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + transformer._ffn(h2, lp, cfg)
+            return (xc, kp_, vp_, sp_), phys
+
+        (x, k2, v2, s2), sel = mlayers.scan_layers(
+            body, (x, k_pool, v_pool, s_pool), (params["layers"], lidx))
+        x = mlayers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = transformer.logits_last(params, cfg, x)
+        return logits, k2, v2, s2, sel
+
+    return fn
+
+
+def _paged_prefill_fn(cfg: ArchConfig, chunk: int):
+    """Build the jitted chunked-prefill step for one request.
+
+    Processes ``t_valid <= chunk`` prompt tokens starting at absolute
+    position ``start``: dense causal attention over the request's paged
+    context (gathered through the block table), KV scattered into the
+    pool, page summaries recomputed through the same
+    ``page_summary_from_pool`` the decode path uses.  Padded positions
+    write to scratch page 0.
+    """
+    page = cfg.kv_page
+    dt = jnp.dtype(cfg.param_dtype)
+    ntp = chunk // page + 2           # touched-page bound per chunk
+
+    def fn(params, k_pool, v_pool, s_pool, tokens, start, t_valid, bt):
+        nl = bt.shape[0]
+        c = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens[None, :], axis=0).astype(dt)
+        if getattr(cfg, "scale_embed", False):
+            x = x * (cfg.d_model ** 0.5)
+        pos = start + jnp.arange(c)                  # [C]
+        in_chunk = jnp.arange(c) < t_valid
+        lp_w = jnp.clip(pos // page, 0, nl - 1)
+        phys_w = jnp.where(in_chunk, bt[lp_w], 0)
+        off = pos % page
+        end = start + t_valid
+        lps = start // page + jnp.arange(ntp)
+        pvalid = lps <= (end - 1) // page
+        phys_s = jnp.where(pvalid, bt[jnp.clip(lps, 0, nl - 1)], 0)
+        cnts = jnp.clip(end - lps * page, 1, page)
+        lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+        def body(carry, lp_li):
+            xc, kp_, vp_, sp_ = carry
+            lp, li = lp_li
+            h = mlayers.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            q, k_new, v_new = mlayers.gqa_project(h, lp, cfg)
+            q = mlayers.apply_rope(q, pos[None, :], cfg.rope_theta)
+            k_new = mlayers.apply_rope(k_new, pos[None, :], cfg.rope_theta)
+            kq = sparse_attention.kv_quant(k_new[0], kp_.dtype)
+            vq = sparse_attention.kv_quant(v_new[0], vp_.dtype)
+            kp_ = kp_.at[li, phys_w, off].set(kq)
+            vp_ = vp_.at[li, phys_w, off].set(vq)
+            summ = sparse_attention.page_summary_from_pool(
+                kp_[li], phys_s, cnts)
+            sp_ = sp_.at[li, phys_s].set(summ)
+            # dense causal attention over the paged context: the block
+            # table linearises this request's pages back into logical
+            # order, so positions align with q_offset=start
+            kv_h, hd = cfg.n_kv_heads, cfg.hd
+            kctx = kp_[li, bt].reshape(1, nl * page, kv_h, hd)
+            vctx = vp_[li, bt].reshape(1, nl * page, kv_h, hd)
+            o = mlayers.chunked_attention(
+                q, kctx, vctx, causal=True, q_offset=start,
+                chunk=min(1024, nl * page),
+                logit_softcap=cfg.logit_softcap)
+            xc = xc + mlayers.attn_out(o, lp, cfg.d_model)
+            h2 = mlayers.rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            xc = xc + transformer._ffn(h2, lp, cfg)
+            return (xc, kp_, vp_, sp_), None
+
+        (x, k2, v2, s2), _ = mlayers.scan_layers(
+            body, (x, k_pool, v_pool, s_pool), (params["layers"], lidx))
+        x = mlayers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        hl = jax.lax.dynamic_index_in_dim(x[0], t_valid - 1, 0,
+                                          keepdims=True)      # [1,D]
+        logits = transformer.logits_last(params, cfg, hl[None])[0]
+        return logits, k2, v2, s2
+
+    return fn
+
+
+class PagedEngine:
+    """Continuous-batching serve engine on a paged KV allocator.
+
+    ``submit()`` enqueues requests; ``step()`` runs one scheduler
+    iteration (admission + mixed prefill chunks / ragged decode batch);
+    ``run()`` drives an arrival workload to completion.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 64,
+                 n_pages: int = 0, max_batch: int = 8, chunk: int = 16,
+                 token_budget: int = 0, nsb_pages: int = 64,
+                 capture_trace: bool = False,
+                 kv_dtype_bytes: int = 2) -> None:
+        if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
+            raise NotImplementedError(
+                "PagedEngine supports dense/moe decoder-only configs")
+        if not cfg.sparse_kv:
+            raise NotImplementedError(
+                "PagedEngine requires the sparse-KV decode path")
+        if max_len % cfg.kv_page:
+            raise ValueError("max_len must be a multiple of cfg.kv_page")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.page = cfg.kv_page
+        self.n_logical = max_len // self.page
+        chunk = min(chunk, max_len)
+        # pool default: every batch slot can hold a full-length request,
+        # +1 for the reserved scratch page
+        self.n_pages = n_pages or (1 + max_batch * self.n_logical)
+        self.allocator = KVBlockAllocator(self.n_pages, self.page)
+        self.scheduler = Scheduler(
+            self.allocator, max_batch=max_batch, chunk=chunk,
+            token_budget=token_budget or (max_batch + chunk))
+        self.max_batch = max_batch
+        self.chunk = chunk
+        self.stats = PagedServeStats()
+        self.hot = capture.PageCache(nsb_pages)
+        self._seen_pages: set[int] = set()
+        self.recorder = None
+        if capture_trace:
+            self.recorder = capture.kv_page_stream(
+                f"serve-cb-{cfg.name}", n_pages=self.n_pages,
+                page_tokens=self.page, head_dim=cfg.hd,
+                dtype_bytes=kv_dtype_bytes)
+        kv_dt = (jnp.int8 if cfg.kv_dtype == "int8"
+                 else jnp.dtype(cfg.param_dtype))
+        self.pool_cfg = PagePoolConfig(
+            n_pages=self.n_pages, page_tokens=self.page,
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, dtype_bytes=jnp.dtype(kv_dt).itemsize)
+        shape = (cfg.n_layers, self.n_pages, self.page, cfg.n_kv_heads,
+                 cfg.hd)
+        self.k_pool = jnp.zeros(shape, kv_dt)
+        self.v_pool = jnp.zeros(shape, kv_dt)
+        self.s_pool = jnp.zeros(
+            (cfg.n_layers, self.n_pages, cfg.n_kv_heads, cfg.hd),
+            jnp.float32)
+        self._decode = jax.jit(_paged_decode_fn(cfg))
+        self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk))
+        self.now = 0
+        self._next_rid = 0
+        self.requests: dict[int, Request] = {}
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               arrival: float | None = None) -> int:
+        prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt+gen {len(prompt)}+{max_new_tokens} exceeds "
+                f"max_len {self.max_len}")
+        if not len(prompt) or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and >=1 new token")
+        need = self.allocator.pages_for_tokens(len(prompt) + max_new_tokens)
+        if need > self.allocator.capacity:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.allocator.capacity}: even a lone request could "
+                "never finish (preemption cannot help)")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival=self.now if arrival is None else arrival)
+        self.requests[rid] = req
+        self.scheduler.add(req)
+        return rid
+
+    def _finish_if_done(self, req: Request) -> None:
+        if req.done:
+            self.scheduler.finish(req, self.now)
+            self.stats.finished += 1
+
+    def _run_prefill(self, job: PrefillJob) -> None:
+        req = job.req
+        toks = np.zeros((self.chunk,), dtype=np.int32)
+        toks[: job.n_tokens] = req.prompt[job.start:job.start + job.n_tokens]
+        bt = self.allocator.table_array(req.rid, self.n_logical)
+        logits, self.k_pool, self.v_pool, self.s_pool = self._prefill(
+            self.params, self.k_pool, self.v_pool, self.s_pool,
+            jnp.asarray(toks), np.int32(job.start), np.int32(job.n_tokens),
+            jnp.asarray(bt))
+        req.computed += job.n_tokens
+        self.stats.prefill_tokens += job.n_tokens
+        if req.computed == req.prompt_len:
+            lg = np.asarray(logits)
+            # first pass samples the first token here; a preemption
+            # resume already holds it and moves on to decode replay
+            if not req.out_tokens:
+                req.out_tokens.append(int(lg.argmax()))
+                req.first_token_at = self.now
+                req.last_logits = lg
+                self.stats.tokens_out += 1
+                self._finish_if_done(req)
+
+    def _run_decode(self, rows: list) -> None:
+        r_act = len(rows)
+        token = np.zeros((self.max_batch,), dtype=np.int32)
+        pos = np.zeros((self.max_batch,), dtype=np.int32)
+        bts = np.zeros((self.max_batch, self.n_logical), dtype=np.int32)
+        for i, req in enumerate(rows):
+            token[i] = req.seq[req.computed]
+            pos[i] = req.computed
+            bts[i] = self.allocator.table_array(req.rid, self.n_logical)
+        logits, self.k_pool, self.v_pool, self.s_pool, sel = self._decode(
+            self.params, self.k_pool, self.v_pool, self.s_pool,
+            jnp.asarray(token), jnp.asarray(pos), jnp.asarray(bts))
+        lg = np.asarray(logits)
+        sel0 = np.asarray(sel[0])                    # layer-0 [R,KV,K]
+        for i, req in enumerate(rows):
+            frontier = req.computed == req.total_len - 1
+            req.computed += 1
+            self.stats.decode_tokens += 1
+            if self.recorder is not None:
+                # a request with fewer valid pages than the TopK budget
+                # pads its selection with NULL (masked in attention, no
+                # data fetched) — drop those from the traffic record
+                for head_sel in sel0[i]:
+                    self.recorder.record(head_sel[head_sel != NULL_PAGE],
+                                         rid=req.rid, step=self.now)
+            if frontier:
+                req.out_tokens.append(int(lg[i].argmax()))
+                req.last_logits = lg[i].copy()
+                self.stats.tokens_out += 1
+                self._finish_if_done(req)
+        # NSB accounting over the iteration's unique physical pages
+        uniq = np.unique(sel0[:r_act])
+        uniq = uniq[uniq != NULL_PAGE]
+        self._seen_pages.update(int(p) for p in uniq)
+        self.stats.pages_unique = len(self._seen_pages)
+        for p in uniq:
+            self.stats.pages_touched += 1
+            if self.hot.touch(int(p)):
+                self.stats.nsb_hits += 1
+            else:
+                self.stats.nsb_misses += 1
+
+    # -- iteration loop ------------------------------------------------------
+
+    def step(self) -> int:
+        """One scheduler iteration; returns scheduled token count."""
+        self.now += 1
+        self.stats.iterations += 1
+        plan = self.scheduler.schedule(self.now)
+        for job in plan.prefill:
+            self._run_prefill(job)
+        if plan.decode:
+            self._run_decode(plan.decode)
+            self.stats.steps += 1
+        self.stats.preemptions = self.scheduler.n_preemptions
+        return plan.n_tokens
+
+    def run(self, workload=None, max_iters: int = 100000) -> dict:
+        """Drive ``workload`` (iterable of (tick, prompt, max_new)) to
+        completion; returns the request table."""
+        pending = deque(sorted(workload or [], key=lambda w: w[0]))
+        while (pending or self.scheduler.has_work):
+            if max_iters <= 0:
+                raise RuntimeError("run() exceeded max_iters")
+            max_iters -= 1
+            while pending and pending[0][0] <= self.now:
+                tick, prompt, max_new = pending.popleft()
+                self.submit(prompt, max_new, arrival=tick)
+            self.step()
+        return self.requests
+
+    # -- reporting -----------------------------------------------------------
+
+    def captured_trace(self):
+        """Recorded multi-tenant page traffic as a simulator Trace."""
+        if self.recorder is None:
+            raise RuntimeError("construct PagedEngine with "
+                               "capture_trace=True to record selections")
+        return self.recorder.to_trace()
+
+    def metrics(self) -> dict:
+        done = [r for r in self.requests.values()
+                if r.finished_at >= 0]
+        lat = [r.latency() for r in done]
+        ttft = [r.ttft() for r in done]
+        return {
+            "n_finished": len(done),
+            "iterations": self.stats.iterations,
+            "tokens_out": self.stats.tokens_out,
+            "p50_latency": percentile(lat, 0.50),
+            "p99_latency": percentile(lat, 0.99),
+            "p50_ttft": percentile(ttft, 0.50),
+            "p99_ttft": percentile(ttft, 0.99),
+            "nsb_hot_hit_rate": self.stats.hot_hit_rate,
+            "preemptions": self.stats.preemptions,
+            "pages_peak_in_use": self.allocator.stats.peak_in_use,
+            "kv_pool_mib": self.pool_cfg.pool_bytes / 2 ** 20,
+        }

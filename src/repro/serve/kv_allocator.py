@@ -1,0 +1,138 @@
+"""Paged KV-cache allocator: one physical page pool, per-request block tables.
+
+The serving engine's KV cache is a pool of fixed-size physical pages
+(``cfg.kv_page`` tokens each); every request owns a *block table* mapping
+its logical pages (position // page) to physical page ids.  The allocator
+manages the free list, grows block tables on demand, and frees a request's
+pages on completion or preemption.
+
+The physical page id is the unit the whole memory-system story shares:
+
+* the TopK selection in the paged decode path gathers K/V *by physical
+  page id* (``sparse_attention.select_pages_blocktable``),
+* the NSB hot-set accounting (``capture.PageCache``) is keyed by the same
+  physical ids, and
+* the capture recorder (``capture.PageStream``) tags those ids per
+  request/step so the NVR simulator replays the allocator's actual layout.
+
+Physical page 0 is reserved as a scratch/null page: padded batch rows and
+masked prefill positions write there, so the jitted model functions never
+need data-dependent shapes.  The allocator never hands page 0 out.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+@dataclass
+class AllocatorStats:
+    allocs: int = 0
+    frees: int = 0
+    alloc_failures: int = 0
+    peak_in_use: int = 0
+
+
+class KVBlockAllocator:
+    """Free-list allocator over ``n_pages`` physical KV pages.
+
+    ``n_pages`` includes the reserved scratch page 0, so ``capacity`` —
+    the number of allocatable pages — is ``n_pages - 1``.
+    """
+
+    def __init__(self, n_pages: int, page_tokens: int) -> None:
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        # pop() from the end -> low page ids are handed out first
+        self._free = list(range(n_pages - 1, NULL_PAGE, -1))
+        self._tables: dict[int, list[int]] = {}
+        self.stats = AllocatorStats()
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - self.pages_free
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_tokens)
+
+    # -- block tables --------------------------------------------------------
+
+    def table(self, rid: int) -> list[int]:
+        return self._tables.setdefault(rid, [])
+
+    def table_array(self, rid: int, n_logical: int) -> np.ndarray:
+        """The request's block table padded with NULL_PAGE to length
+        ``n_logical`` (the jitted functions take fixed-shape tables)."""
+        bt = np.full((n_logical,), NULL_PAGE, dtype=np.int32)
+        pages = self._tables.get(rid, [])
+        bt[: len(pages)] = pages[:n_logical]
+        return bt
+
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        """Grow ``rid``'s block table to cover ``n_tokens`` positions.
+
+        All-or-nothing: returns False (and allocates nothing) if the free
+        list cannot supply every page needed.
+        """
+        need = self.pages_for_tokens(n_tokens) - len(self.table(rid))
+        if need <= 0:
+            return True
+        if need > self.pages_free:
+            self.stats.alloc_failures += 1
+            return False
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[rid].extend(pages)
+        self.stats.allocs += need
+        self.stats.peak_in_use = max(self.stats.peak_in_use,
+                                     self.pages_in_use)
+        return True
+
+    def free_request(self, rid: int) -> list[int]:
+        """Release every page ``rid`` owns; returns the freed ids."""
+        pages = self._tables.pop(rid, [])
+        self.stats.frees += len(pages)
+        # LIFO reuse keeps the hot physical ids dense, which is what the
+        # NSB hot-set model rewards (recently-freed pages are re-touched)
+        self._free.extend(reversed(pages))
+        return pages
+
+    def owned(self, rid: int) -> int:
+        return len(self._tables.get(rid, []))
+
+
+@dataclass
+class PagePoolConfig:
+    """Geometry of the physical pools the engine allocates once."""
+
+    n_pages: int
+    page_tokens: int
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    dtype_bytes: int = 2
+
+    @property
+    def page_bytes(self) -> int:
+        """K+V bytes of one physical page across all layers."""
+        return (2 * self.n_layers * self.page_tokens * self.n_kv_heads
+                * self.head_dim * self.dtype_bytes)
+
+    @property
+    def pool_bytes(self) -> int:
+        return self.n_pages * self.page_bytes

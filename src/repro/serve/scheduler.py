@@ -1,0 +1,271 @@
+"""Continuous-batching scheduler: admission queue + iteration-level plans.
+
+One scheduler iteration mixes *decode steps* (one token per running
+request) and *prefill chunks* (up to ``chunk`` prompt tokens of one
+request) under a shared per-iteration token budget — the Orca/vLLM
+iteration-level scheduling model, sized down to this repo's CPU smoke
+scale.  Admission is strict FIFO with head-of-line blocking: a request is
+only admitted when the paged allocator can hold its whole prompt, and the
+queue head is never skipped in favour of a smaller later request.
+
+Preemption: when a decode step needs a fresh KV page and the pool is
+exhausted, the most-recently-admitted running request is evicted
+(recompute policy — its pages are freed and it re-enters the *front* of
+the waiting queue, keeping its original FIFO priority).  On resume the
+engine re-prefills the prompt and *replays* the already-generated tokens
+through the decode path, which reproduces the original computation
+exactly (see ``engine.PagedEngine``).
+
+Arrivals come from :class:`PoissonArrivals` (open-loop load generator) or
+:class:`TraceArrivals` (replay a recorded workload); both yield
+``(arrival_tick, prompt_len, max_new_tokens)`` tuples.
+"""
+
+from __future__ import annotations
+
+import enum
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .kv_allocator import KVBlockAllocator
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One serving request and its full lifecycle accounting.
+
+    ``computed`` is the KV frontier: the number of positions whose K/V
+    pages are materialised.  Positions ``[0, len(prompt))`` are filled by
+    prefill chunks; positions beyond that by decode steps.  After a
+    preemption ``computed`` drops to 0 and climbs back through the same
+    chunk schedule, then through decode *replay* of the tokens already in
+    ``out_tokens``.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival: float = 0.0
+    state: RequestState = RequestState.WAITING
+    out_tokens: list = field(default_factory=list)
+    computed: int = 0
+    admitted_at: float = -1.0
+    admission_seq: int = -1
+    first_token_at: float = -1.0
+    finished_at: float = -1.0
+    n_preemptions: int = 0
+    last_logits: np.ndarray | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def seq(self) -> np.ndarray:
+        """prompt + generated tokens: the token at each KV position."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, dtype=np.int64)]
+        )
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + len(self.out_tokens)
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.computed < self.prompt_len
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    def latency(self) -> float:
+        return self.finished_at - self.arrival
+
+    def ttft(self) -> float:
+        return self.first_token_at - self.arrival
+
+
+@dataclass
+class PrefillJob:
+    req: Request
+    start: int
+    n_tokens: int
+
+
+@dataclass
+class IterationPlan:
+    decode: list = field(default_factory=list)      # [Request]
+    prefill: list = field(default_factory=list)     # [PrefillJob]
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.decode) + sum(j.n_tokens for j in self.prefill)
+
+
+class PoissonArrivals:
+    """Open-loop Poisson arrival process in scheduler-tick time.
+
+    ``rate`` is the expected number of request arrivals per iteration;
+    prompt and generation lengths are drawn uniformly from the given
+    ranges.  Deterministic under ``seed``.
+    """
+
+    def __init__(self, n_requests: int, rate: float = 0.5,
+                 prompt_len: tuple = (8, 32), gen_len: tuple = (4, 16),
+                 seed: int = 0) -> None:
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate, size=n_requests)
+        t = np.cumsum(gaps)
+        self.schedule = [
+            (float(t[i]),
+             int(rng.integers(prompt_len[0], prompt_len[1] + 1)),
+             int(rng.integers(gen_len[0], gen_len[1] + 1)))
+            for i in range(n_requests)
+        ]
+
+    def __iter__(self):
+        return iter(self.schedule)
+
+
+class TraceArrivals:
+    """Replay an explicit ``(tick, prompt_len, max_new)`` workload."""
+
+    def __init__(self, schedule) -> None:
+        self.schedule = [(float(t), int(p), int(g)) for t, p, g in schedule]
+
+    def __iter__(self):
+        return iter(self.schedule)
+
+
+class Scheduler:
+    """Iteration-level scheduler over one :class:`KVBlockAllocator`."""
+
+    def __init__(self, allocator: KVBlockAllocator, max_batch: int = 8,
+                 chunk: int = 16, token_budget: int = 32,
+                 max_running: int = 0) -> None:
+        self.allocator = allocator
+        self.max_batch = max_batch
+        self.chunk = chunk
+        self.token_budget = max(token_budget, 1)
+        self.max_running = max_running or max_batch
+        self.waiting: deque[Request] = deque()
+        self.running: list[Request] = []
+        self._admission_seq = 0
+        self.n_preemptions = 0
+
+    # -- queue interface -----------------------------------------------------
+
+    def add(self, req: Request) -> None:
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- internals -----------------------------------------------------------
+
+    def _preempt(self, victim: Request) -> None:
+        self.allocator.free_request(victim.rid)
+        victim.state = RequestState.PREEMPTED
+        victim.computed = 0
+        victim.n_preemptions += 1
+        self.n_preemptions += 1
+        self.running.remove(victim)
+        # front of the queue: preempted requests keep FIFO priority
+        self.waiting.appendleft(victim)
+
+    def _ensure_with_preemption(self, req: Request, n_tokens: int) -> bool:
+        """Allocate pages for ``req`` up to ``n_tokens`` positions,
+        evicting later-admitted running requests if the pool is full.
+        Returns False if ``req`` itself had to be preempted (it is the
+        youngest request and still cannot fit)."""
+        while not self.allocator.ensure(req.rid, n_tokens):
+            victims = [r for r in self.running
+                       if r is not req
+                       and r.admission_seq > req.admission_seq]
+            if victims:
+                self._preempt(max(victims, key=lambda r: r.admission_seq))
+                continue
+            # no younger victim: preempt the requester itself (defer)
+            self._preempt(req)
+            return False
+        return True
+
+    def _admit(self, now: float) -> list[Request]:
+        admitted = []
+        while (self.waiting and len(self.running) < self.max_running):
+            head = self.waiting[0]
+            need = self.allocator.pages_for_tokens(head.prompt_len)
+            if need > self.allocator.pages_free:
+                break  # head-of-line blocking keeps admission FIFO
+            self.waiting.popleft()
+            head.state = RequestState.RUNNING
+            # a resumed (previously preempted) request keeps its original
+            # admission_seq so it cannot be victimised by requests it
+            # used to outrank
+            if head.admission_seq < 0:
+                head.admitted_at = now
+                head.admission_seq = self._admission_seq
+                self._admission_seq += 1
+            self.running.append(head)
+            admitted.append(head)
+        return admitted
+
+    # -- the per-iteration plan ----------------------------------------------
+
+    def schedule(self, now: float = 0.0) -> IterationPlan:
+        """Build one iteration's mixed prefill/decode plan.
+
+        Decode steps are scheduled first (latency priority), then prefill
+        chunks of already-running requests, then new admissions — all
+        under ``token_budget`` scheduled tokens and ``max_batch`` decode
+        rows per iteration.
+        """
+        plan = IterationPlan()
+        budget = self.token_budget
+
+        self._admit(now)
+
+        # decode / replay steps: requests past their prompt frontier
+        for req in sorted(self.running, key=lambda r: r.admission_seq):
+            if req not in self.running or req.in_prefill or budget <= 0:
+                continue
+            if len(plan.decode) >= self.max_batch:
+                break
+            if not self._ensure_with_preemption(req, req.computed + 1):
+                continue        # deferred: req preempted itself
+            plan.decode.append(req)
+            budget -= 1
+
+        # prefill chunks for running requests still materialising prompts
+        for req in sorted(self.running, key=lambda r: r.admission_seq):
+            if req not in self.running or not req.in_prefill or budget <= 0:
+                continue
+            n = min(self.chunk, req.prompt_len - req.computed, budget)
+            if not self._ensure_with_preemption(req, req.computed + n):
+                continue        # deferred: req preempted itself
+            plan.prefill.append(PrefillJob(req, req.computed, n))
+            budget -= n
+
+        # a prefill allocation may have evicted a request planned above
+        plan.decode = [r for r in plan.decode if r in self.running]
+        plan.prefill = [j for j in plan.prefill if j.req in self.running]
+        return plan
+
+    def finish(self, req: Request, now: float) -> None:
+        req.state = RequestState.FINISHED
+        req.finished_at = now
+        self.allocator.free_request(req.rid)
+        if req in self.running:
+            self.running.remove(req)

@@ -97,7 +97,6 @@ def restore(ckpt_dir: str, like, step: int | None = None,
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
 
-    names = iter(sorted(manifest["names"]))
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     by_name = {}
     for p, leaf in flat_like:

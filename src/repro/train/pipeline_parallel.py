@@ -20,7 +20,6 @@ multi-pod fleets).  Recorded as a selectable strategy, not the default.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -4,13 +4,10 @@ gradient accumulation, checkpoint/restart, preemption, straggler watchdog.
 
 from __future__ import annotations
 
-import functools
-import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import optim, sharding

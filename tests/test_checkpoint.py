@@ -1,6 +1,5 @@
 """Checkpoint save/restore, atomicity/GC, resharding, fault tolerance."""
 
-import os
 
 import jax
 import jax.numpy as jnp

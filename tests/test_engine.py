@@ -1,7 +1,6 @@
 """Event-driven engine: seed parity, registry, config, sweep runner,
 and prefetcher invariants."""
 
-import statistics
 
 import numpy as np
 import pytest

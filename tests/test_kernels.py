@@ -3,7 +3,6 @@
 Kernels execute in interpret mode on CPU (the TPU lowering is exercised
 structurally — BlockSpecs, scalar prefetch — with the same code path)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

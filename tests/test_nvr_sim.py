@@ -5,8 +5,8 @@ import statistics
 import numpy as np
 import pytest
 
-from repro.core.nvr import (Cache, DRAM, LINE_BYTES, make_hierarchy,
-                            make_trace, run_modes, simulate)
+from repro.core.nvr import (Cache, DRAM, LINE_BYTES, make_trace,
+                            run_modes, simulate)
 from repro.core.nvr.traces import WORKLOADS
 
 ALL = list(WORKLOADS)

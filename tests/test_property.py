@@ -1,6 +1,5 @@
 """Hypothesis property tests on system invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

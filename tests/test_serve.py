@@ -1,0 +1,271 @@
+"""Continuous-batching serve layer: allocator, scheduler, paged engine."""
+
+import numpy as np
+import pytest
+
+from repro.serve.kv_allocator import NULL_PAGE, KVBlockAllocator
+from repro.serve.scheduler import (PoissonArrivals, Request, RequestState,
+                                   Scheduler, TraceArrivals)
+
+
+class TestAllocator:
+    def test_page0_reserved(self):
+        al = KVBlockAllocator(n_pages=8, page_tokens=4)
+        assert al.capacity == 7
+        handed = []
+        for rid in range(7):
+            assert al.ensure(rid, 4)
+            handed += al.table(rid)
+        assert NULL_PAGE not in handed
+        assert sorted(handed) == list(range(1, 8))
+
+    def test_ensure_grows_and_is_idempotent(self):
+        al = KVBlockAllocator(n_pages=16, page_tokens=4)
+        assert al.ensure(0, 1)
+        assert al.owned(0) == 1
+        assert al.ensure(0, 4)          # same page covers 4 tokens
+        assert al.owned(0) == 1
+        assert al.ensure(0, 5)
+        assert al.owned(0) == 2
+        assert al.pages_in_use == 2
+
+    def test_all_or_nothing_failure(self):
+        al = KVBlockAllocator(n_pages=4, page_tokens=4)   # 3 allocatable
+        assert al.ensure(0, 8)          # 2 pages
+        assert not al.ensure(1, 8)      # needs 2, only 1 free
+        assert al.owned(1) == 0         # nothing partially allocated
+        assert al.stats.alloc_failures == 1
+        assert al.ensure(1, 4)          # 1 page still fits
+
+    def test_free_and_reuse(self):
+        al = KVBlockAllocator(n_pages=8, page_tokens=4)
+        al.ensure(0, 12)
+        pages = al.free_request(0)
+        assert len(pages) == 3 and al.pages_free == 7
+        al.ensure(1, 4)
+        assert al.table(1)[0] == pages[0]   # LIFO: hot ids come back first
+
+    def test_table_array_padding(self):
+        al = KVBlockAllocator(n_pages=8, page_tokens=4)
+        al.ensure(0, 8)
+        bt = al.table_array(0, 6)
+        assert bt.shape == (6,) and bt.dtype == np.int32
+        assert list(bt[:2]) == al.table(0)
+        assert all(bt[2:] == NULL_PAGE)
+
+
+def _mk(rid, plen, gen, arrival=0.0):
+    return Request(rid=rid, prompt=np.arange(plen), max_new_tokens=gen,
+                   arrival=arrival)
+
+
+def _drive(sched, now):
+    """Advance one iteration without a model: prefill chunks bump the
+    frontier; decode rows append a fake token at the frontier."""
+    plan = sched.schedule(now)
+    for job in plan.prefill:
+        job.req.computed += job.n_tokens
+        if job.req.computed == job.req.prompt_len:
+            job.req.out_tokens.append(0)
+            job.req.first_token_at = now
+    for req in plan.decode:
+        frontier = req.computed == req.total_len - 1
+        req.computed += 1
+        if frontier:
+            req.out_tokens.append(0)
+            if req.done:
+                sched.finish(req, now)
+    return plan
+
+
+class TestScheduler:
+    def test_fifo_admission_with_head_of_line_blocking(self):
+        al = KVBlockAllocator(n_pages=9, page_tokens=4)   # 8 pages
+        s = Scheduler(al, max_batch=4, chunk=8, token_budget=64)
+        big = _mk(0, 24, 2)       # needs 6 pages
+        small1 = _mk(1, 4, 2)     # needs 1 page
+        small2 = _mk(2, 4, 2)
+        for r in (big, small1, small2):
+            s.add(r)
+        s.schedule(0.0)
+        # big admitted first and fills most of the pool; the smalls fit
+        assert big.admission_seq == 0
+        # now exhaust: a second big request must NOT be bypassed by a
+        # later small one
+        big2 = _mk(3, 24, 2)
+        small3 = _mk(4, 4, 2)
+        s.add(big2)
+        s.add(small3)
+        s.schedule(1.0)
+        assert big2.state is RequestState.WAITING
+        assert small3.state is RequestState.WAITING     # blocked behind big2
+        assert [r.rid for r in s.waiting] == [3, 4]
+
+    def test_admission_order_matches_arrival_under_load(self):
+        al = KVBlockAllocator(n_pages=17, page_tokens=4)
+        s = Scheduler(al, max_batch=4, chunk=8, token_budget=16)
+        reqs = [_mk(i, 8 + 4 * (i % 3), 3, arrival=float(i)) for i in range(8)]
+        for r in reqs:
+            s.add(r)
+        now = 0.0
+        while s.has_work and now < 200:
+            now += 1
+            _drive(s, now)
+        seqs = [r.admission_seq for r in reqs]
+        assert seqs == sorted(seqs)                  # FIFO admission
+        firsts = [r.first_token_at for r in reqs]
+        assert all(f >= 0 for f in firsts)
+
+    def test_exhaustion_preempts_youngest(self):
+        # 4 allocatable pages of 4 tokens; two requests that each grow to
+        # 3 pages -> the pool cannot hold both at full length
+        al = KVBlockAllocator(n_pages=5, page_tokens=4)
+        s = Scheduler(al, max_batch=2, chunk=8, token_budget=16)
+        r0 = _mk(0, 8, 4)
+        r1 = _mk(1, 8, 4)
+        s.add(r0)
+        s.add(r1)
+        now = 0.0
+        while s.has_work and now < 100:
+            now += 1
+            _drive(s, now)
+        assert s.n_preemptions > 0
+        assert r1.n_preemptions > 0        # the younger request yields
+        assert r0.n_preemptions == 0       # the elder never does
+        assert r0.done and r1.done
+        assert al.pages_in_use == 0        # everything released
+
+    def test_preempted_request_keeps_queue_priority(self):
+        al = KVBlockAllocator(n_pages=5, page_tokens=4)
+        s = Scheduler(al, max_batch=2, chunk=8, token_budget=16)
+        r0, r1 = _mk(0, 8, 6), _mk(1, 8, 6)
+        s.add(r0)
+        s.add(r1)
+        _drive(s, 1.0)
+        s.add(_mk(2, 4, 2))
+        # drive until r1 is preempted; it must sit AHEAD of rid 2
+        for now in range(2, 50):
+            _drive(s, float(now))
+            if r1.state is RequestState.WAITING and r1.n_preemptions:
+                break
+        assert r1.n_preemptions > 0
+        ids = [r.rid for r in s.waiting]
+        assert ids.index(1) < ids.index(2) if 2 in ids else True
+
+    def test_mixed_plan_respects_budget(self):
+        al = KVBlockAllocator(n_pages=33, page_tokens=4)
+        s = Scheduler(al, max_batch=4, chunk=8, token_budget=10)
+        decoding = _mk(0, 4, 8)
+        s.add(decoding)
+        _drive(s, 0.0)     # prefill whole 4-token prompt
+        s.add(_mk(1, 32, 2))
+        plan = s.schedule(1.0)
+        assert len(plan.decode) == 1
+        assert sum(j.n_tokens for j in plan.prefill) <= 9
+        assert plan.n_tokens <= 10
+
+
+class TestArrivals:
+    def test_poisson_deterministic_and_sorted(self):
+        a = PoissonArrivals(16, rate=0.5, seed=3)
+        b = PoissonArrivals(16, rate=0.5, seed=3)
+        assert a.schedule == b.schedule
+        ticks = [t for t, _, _ in a.schedule]
+        assert ticks == sorted(ticks) and len(ticks) == 16
+
+    def test_trace_arrivals_roundtrip(self):
+        tr = TraceArrivals([(0, 8, 4), (2.5, 16, 2)])
+        assert list(tr) == [(0.0, 8, 4), (2.5, 16, 2)]
+
+
+@pytest.mark.slow
+class TestPagedEngine:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import api
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(7)
+        work = [(0.0, rng.integers(1, cfg.vocab, size=int(p)), 6)
+                for p in rng.integers(10, 22, size=3)]
+        return cfg, params, work
+
+    def _run(self, cfg, params, work, n_pages):
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
+                          max_batch=4, chunk=8, nsb_pages=32)
+        eng.run([(t, p.copy(), g) for t, p, g in work])
+        return eng
+
+    def test_all_finish_and_pool_drains(self, setup):
+        cfg, params, work = setup
+        eng = self._run(cfg, params, work, 0)
+        assert all(r.state is RequestState.FINISHED
+                   for r in eng.requests.values())
+        assert all(len(r.out_tokens) == r.max_new_tokens
+                   for r in eng.requests.values())
+        assert eng.allocator.pages_in_use == 0
+
+    def test_preemption_resume_identical_logits(self, setup):
+        """Allocator exhaustion forces preemption; recompute + decode
+        replay must reproduce the unpressured run bit-for-bit."""
+        cfg, params, work = setup
+        calm = self._run(cfg, params, work, 0)
+        tight = self._run(cfg, params, work, 1 + 8)   # 8 pages: pressure
+        assert calm.scheduler.n_preemptions == 0
+        assert tight.scheduler.n_preemptions > 0
+        for rid in calm.requests:
+            a, b = calm.requests[rid], tight.requests[rid]
+            assert a.out_tokens == b.out_tokens
+            np.testing.assert_allclose(a.last_logits, b.last_logits,
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_admission_fifo_under_mixed_load(self, setup):
+        cfg, params, _ = setup
+        rng = np.random.default_rng(9)
+        work = [(float(i) * 0.5, rng.integers(1, cfg.vocab, size=12), 4)
+                for i in range(6)]
+        eng = self._run(cfg, params, work, 1 + 16)
+        reqs = [eng.requests[r] for r in sorted(eng.requests)]
+        seqs = [r.admission_seq for r in reqs]
+        assert seqs == sorted(seqs)
+
+    def test_short_prompt_never_records_null_page(self, setup):
+        """A request with fewer valid pages than the TopK budget pads its
+        selection with the reserved NULL page; those slots are masked in
+        attention and must not leak into capture or NSB accounting."""
+        cfg, params, _ = setup
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, max_batch=2, chunk=8,
+                          nsb_pages=16, capture_trace=True)
+        eng.submit(np.arange(1, 7), max_new_tokens=4)    # 6-token prompt
+        eng.run()
+        assert eng.recorder.n_events > 0
+        for ev in eng.recorder.events:
+            assert ev.min() >= 1
+        assert 0 not in eng._seen_pages
+
+    def test_run_preserves_fractional_arrival_ticks(self, setup):
+        cfg, params, _ = setup
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, max_batch=2, chunk=8)
+        eng.run([(0.7, np.arange(1, 9), 2)])
+        req = eng.requests[0]
+        assert req.arrival == 0.7
+        assert req.latency() == req.finished_at - 0.7
+
+    def test_rejects_oversized_request(self, setup):
+        cfg, params, _ = setup
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, n_pages=1 + 4,
+                          max_batch=2, chunk=8)
+        with pytest.raises(ValueError):
+            eng.submit(np.arange(1, 30), max_new_tokens=10)

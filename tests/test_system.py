@@ -5,7 +5,6 @@ sharding rules produce coherent specs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import sharding
 from repro.configs import get_config
@@ -85,6 +84,34 @@ def test_serving_engine_nsb_stats():
     # decode TopK selections exhibit strong temporal reuse (the paper's
     # premise for the NSB)
     assert s.hot_hit_rate > 0.5
+
+
+def test_benchmark_runner_exit_codes(monkeypatch, capsys):
+    """benchmarks.run must exit non-zero when a named benchmark raises
+    (CI smoke jobs depend on the failure propagating) and 2 on unknown
+    names."""
+    import os as _os
+    import sys as _sys
+    root = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    _sys.path.insert(0, root)
+    try:
+        from benchmarks import paper_figs, run
+    finally:
+        _sys.path.remove(root)
+
+    def boom():
+        raise RuntimeError("injected failure")
+
+    def fine():
+        return [("r", 1)], {"metric": 1.0}
+
+    monkeypatch.setattr(paper_figs, "ALL", {"boom": boom, "fine": fine})
+    assert run.main(["fine"]) == 0
+    assert run.main(["boom"]) == 1
+    assert run.main(["boom", "fine"]) == 1      # keeps running the rest
+    out = capsys.readouterr().out
+    assert "boom,FAILED" in out and "fine," in out
+    assert run.main(["nope"]) == 2
 
 
 def test_sharding_rules_divisibility():
