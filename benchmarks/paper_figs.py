@@ -404,6 +404,13 @@ def serve_bench():
     return _sb()
 
 
+def prefix_bench():
+    """Shared-prefix multi-tenant serving with vs without the COW prefix
+    cache (defined in benchmarks/serve_bench.py; lazy import as above)."""
+    from .serve_bench import prefix_bench as _pb
+    return _pb()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -416,4 +423,5 @@ ALL = {
     "sweep_grid": sweep_grid,          # grid sweep runner + artifacts
     "capture_roundtrip": capture_roundtrip,  # serve/MoE capture -> sim
     "serve_bench": serve_bench,        # continuous batching vs lockstep
+    "prefix_bench": prefix_bench,      # COW prefix cache on/off
 }

@@ -5,7 +5,7 @@ per-figure headline metrics vs the paper's claims.  Detailed per-row
 artifacts (paired CSV + JSON, via the engine sweep runner's writer) land
 in benchmarks/results/.
 
-Beyond the paper figures, four engineering benches ride along:
+Beyond the paper figures, five engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -14,6 +14,8 @@ Beyond the paper figures, four engineering benches ride along:
                       simulator (needs jax; all paper figs are numpy-only)
   serve_bench       — continuous-batching Poisson load vs the single-batch
                       baseline, with multi-tenant capture -> NVR replay
+  prefix_bench      — shared-system-prompt load with vs without the COW
+                      prefix cache: prefill savings, TTFT, NVR replay
 
 Exit status: 0 only if every requested benchmark ran clean; a benchmark
 that raises is reported (traceback + summary line) and the process exits

@@ -66,8 +66,12 @@ class PageStream:
 
     def record_batched(self, idx, *, rid: int = -1, step: int = -1) -> None:
         """Record ``idx[..., K]`` as one event per leading slot — e.g. a
-        ``[B, KV, K]`` TopK selection becomes ``B*KV`` events."""
+        ``[B, KV, K]`` TopK selection becomes ``B*KV`` events.  Empty
+        rows (K == 0) are skipped, matching :meth:`record` — zero-length
+        events would poison ``to_trace`` with empty bundles."""
         arr = np.asarray(idx, dtype=np.int64)
+        if not arr.size:            # [B, KV, 0] selection: nothing chosen
+            return
         for row in arr.reshape(-1, arr.shape[-1]):
             self.events.append(row.copy())
             self.rids.append(int(rid))
@@ -177,13 +181,17 @@ def moe_expert_stream(expert_ids, n_experts: int, d_model: int, d_ff: int,
     stream = PageStream(name=name, n_rows=n_experts * d_ff,
                         row_bytes=d_model * dtype_bytes,
                         compute_per_row=16 * d_model / MAC_RATE)
-    span = max(1, d_ff - tile_rows)
+    # clamp the tile to the expert's row range: with d_ff <= tile_rows an
+    # unclamped tile would spill into the next expert's rows (and past
+    # n_rows for the last expert)
+    tile = min(tile_rows, d_ff)
+    span = d_ff - tile + 1                 # valid tile start positions
     for e in range(n_experts):
         count = int((eids == e).sum())
         n_blocks = (count + block_t - 1) // block_t
         for bi in range(n_blocks):
-            start = (bi * tile_rows) % span
-            rows = e * d_ff + start + np.arange(tile_rows, dtype=np.int64)
+            start = (bi * tile) % span
+            rows = e * d_ff + start + np.arange(tile, dtype=np.int64)
             stream.record(rows)
     return stream
 

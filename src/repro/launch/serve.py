@@ -10,6 +10,13 @@ Continuous-batching mode — Poisson arrivals through the paged engine
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --continuous --requests 16 --rate 0.5 --max-batch 8 --pages 49
+
+Multi-tenant prefix reuse — requests share one of N system prompts and
+the COW prefix cache skips their recomputation (--no-prefix-cache to
+compare against the uncached run):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --continuous --requests 16 --shared-prefix 4 --capture
 """
 
 from __future__ import annotations
@@ -44,16 +51,36 @@ def _run_single_batch(cfg, params, args):
 
 def _run_continuous(cfg, params, args):
     rng = np.random.default_rng(args.seed)
-    max_len = -(-(args.prompt_len + args.gen) // cfg.kv_page) * cfg.kv_page
-    arrivals = PoissonArrivals(
-        args.requests, rate=args.rate,
-        prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
-        gen_len=(max(1, args.gen // 2), args.gen), seed=args.seed)
-    workload = [(t, rng.integers(1, cfg.vocab, size=p), g)
-                for t, p, g in arrivals]
+    if args.shared_prefix:
+        # multi-tenant shape: every request opens with one of a handful
+        # of system prompts, so whole prompt pages repeat across requests
+        sys_len = max(cfg.kv_page,
+                      args.prompt_len // 2 // cfg.kv_page * cfg.kv_page)
+        sys_prompts = [rng.integers(1, cfg.vocab, size=sys_len)
+                       for _ in range(args.shared_prefix)]
+        arrivals = PoissonArrivals(
+            args.requests, rate=args.rate,
+            prompt_len=(1, max(1, args.prompt_len - sys_len)),
+            gen_len=(max(1, args.gen // 2), args.gen), seed=args.seed)
+        workload = [(t, np.concatenate(
+            [sys_prompts[i % args.shared_prefix],
+             rng.integers(1, cfg.vocab, size=p)]), g)
+            for i, (t, p, g) in enumerate(arrivals)]
+    else:
+        arrivals = PoissonArrivals(
+            args.requests, rate=args.rate,
+            prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
+            gen_len=(max(1, args.gen // 2), args.gen), seed=args.seed)
+        workload = [(t, rng.integers(1, cfg.vocab, size=p), g)
+                    for t, p, g in arrivals]
+    # sized from the built workload: a shared-prefix prompt (system
+    # prompt + suffix) may exceed --prompt-len
+    longest = max(len(p) + g for _, p, g in workload)
+    max_len = -(-longest // cfg.kv_page) * cfg.kv_page
     eng = PagedEngine(cfg, params, max_len=max_len, n_pages=args.pages,
                       max_batch=args.max_batch, chunk=args.chunk,
-                      nsb_pages=args.nsb_pages, capture_trace=args.capture)
+                      nsb_pages=args.nsb_pages, capture_trace=args.capture,
+                      prefix_cache=not args.no_prefix_cache)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
@@ -64,6 +91,12 @@ def _run_continuous(cfg, params, args):
           f"{m['p99_latency']:.0f} iters; TTFT p50/p99 "
           f"{m['p50_ttft']:.0f}/{m['p99_ttft']:.0f}")
     print(f"[serve-cb] NSB hot-set hit rate {m['nsb_hot_hit_rate']:.3f}")
+    if not args.no_prefix_cache:
+        print(f"[serve-cb] prefix cache: {m['prefix_hit_pages']} page "
+              f"hits, {m['prefill_tokens_skipped']} prompt tokens "
+              f"skipped ({m['prefill_tokens_run']} run), "
+              f"{m['cow_copies']} COW copies, "
+              f"{m['prefix_evictions']} evictions")
     if args.capture:
         from ..core.nvr import demand_miss_reduction_from, run_modes
         rs = {r.label: r for r in run_modes(eng.captured_trace(), 2)}
@@ -96,6 +129,12 @@ def main(argv=None):
     p.add_argument("--chunk", type=int, default=16,
                    help="prefill chunk tokens per iteration")
     p.add_argument("--nsb-pages", type=int, default=64)
+    p.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                   help="draw prompts over N shared system prompts "
+                        "(multi-tenant prefix-reuse workload; 0 = "
+                        "independent random prompts)")
+    p.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable cross-request COW prefix caching")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")

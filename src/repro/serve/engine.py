@@ -198,6 +198,7 @@ class PagedServeStats(ServeStats):
     decode_tokens: int = 0
     preemptions: int = 0
     finished: int = 0
+    cow_page_copies: int = 0
 
 
 def _paged_decode_fn(cfg: ArchConfig):
@@ -339,13 +340,23 @@ class PagedEngine:
     ``submit()`` enqueues requests; ``step()`` runs one scheduler
     iteration (admission + mixed prefill chunks / ragged decode batch);
     ``run()`` drives an arrival workload to completion.
+
+    With ``prefix_cache=True`` (default) physical prompt pages are
+    shared across requests: completed whole prompt pages are published
+    to the allocator's content-addressed prefix index after each prefill
+    chunk, admission attaches matching cached pages (refcount++) and
+    fast-forwards the request's KV frontier past them — shared prefixes
+    cost zero model FLOPs while logits stay bitwise-identical to the
+    uncached run (the final prompt token is always recomputed, on a
+    copy-on-write private page when the whole prompt was cached).
     """
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 64,
                  n_pages: int = 0, max_batch: int = 8, chunk: int = 16,
                  token_budget: int = 0, nsb_pages: int = 64,
                  capture_trace: bool = False,
-                 kv_dtype_bytes: int = 2) -> None:
+                 kv_dtype_bytes: int = 2,
+                 prefix_cache: bool = True) -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -363,7 +374,8 @@ class PagedEngine:
         # pool default: every batch slot can hold a full-length request,
         # +1 for the reserved scratch page
         self.n_pages = n_pages or (1 + max_batch * self.n_logical)
-        self.allocator = KVBlockAllocator(self.n_pages, self.page)
+        self.allocator = KVBlockAllocator(self.n_pages, self.page,
+                                          prefix_cache=prefix_cache)
         self.scheduler = Scheduler(
             self.allocator, max_batch=max_batch, chunk=chunk,
             token_budget=token_budget or (max_batch + chunk))
@@ -428,6 +440,20 @@ class PagedEngine:
             self.scheduler.finish(req, self.now)
             self.stats.finished += 1
 
+    def _apply_cow_copies(self) -> None:
+        """Replay the allocator's pending copy-on-write page copies onto
+        the physical pools (K, V, and page-summary planes), before any
+        prefill/decode in this iteration reads the destination pages."""
+        copies = self.allocator.drain_copies()
+        if not copies:
+            return
+        src = np.asarray([s for s, _ in copies], dtype=np.int32)
+        dst = np.asarray([d for _, d in copies], dtype=np.int32)
+        self.k_pool = self.k_pool.at[:, dst].set(self.k_pool[:, src])
+        self.v_pool = self.v_pool.at[:, dst].set(self.v_pool[:, src])
+        self.s_pool = self.s_pool.at[:, dst].set(self.s_pool[:, src])
+        self.stats.cow_page_copies += len(copies)
+
     def _run_prefill(self, job: PrefillJob) -> None:
         req = job.req
         toks = np.zeros((self.chunk,), dtype=np.int32)
@@ -438,6 +464,10 @@ class PagedEngine:
             jnp.asarray(toks), np.int32(job.start), np.int32(job.n_tokens),
             jnp.asarray(bt))
         req.computed += job.n_tokens
+        # whole prompt pages materialised by this chunk become
+        # attachable by later requests with the same prefix
+        self.allocator.register_prefix(req.rid, req.prompt,
+                                       min(req.computed, req.prompt_len))
         self.stats.prefill_tokens += job.n_tokens
         if req.computed == req.prompt_len:
             lg = np.asarray(logits)
@@ -499,6 +529,7 @@ class PagedEngine:
         self.now += 1
         self.stats.iterations += 1
         plan = self.scheduler.schedule(self.now)
+        self._apply_cow_copies()
         for job in plan.prefill:
             self._run_prefill(job)
         if plan.decode:
@@ -547,4 +578,9 @@ class PagedEngine:
             "preemptions": self.stats.preemptions,
             "pages_peak_in_use": self.allocator.stats.peak_in_use,
             "kv_pool_mib": self.pool_cfg.pool_bytes / 2 ** 20,
+            "prefill_tokens_run": self.stats.prefill_tokens,
+            "prefill_tokens_skipped": self.scheduler.prefill_tokens_skipped,
+            "prefix_hit_pages": self.allocator.stats.prefix_hits,
+            "prefix_evictions": self.allocator.stats.prefix_evictions,
+            "cow_copies": self.allocator.stats.cow_copies,
         }

@@ -3,8 +3,21 @@
 The serving engine's KV cache is a pool of fixed-size physical pages
 (``cfg.kv_page`` tokens each); every request owns a *block table* mapping
 its logical pages (position // page) to physical page ids.  The allocator
-manages the free list, grows block tables on demand, and frees a request's
-pages on completion or preemption.
+manages the free list, grows block tables on demand, and releases a
+request's pages on completion or preemption.
+
+Cross-request prefix caching (the ROADMAP's "caching" lever): physical
+pages are *ref-counted* and full prompt pages are *content-addressed* by
+a hash chain over their token content.  ``ensure_prompt`` splits into a
+cached-hit **attach** (refcount++ on a page another request already
+materialised) and a fresh allocation; releasing a page whose content is
+registered in the prefix index parks it in an LRU of
+unreferenced-but-cached pages instead of the free list, so a later
+request with the same prompt prefix can re-attach it.  When a request's
+write frontier lands in a shared page (a fully-cached prompt whose last
+token must be recomputed to produce logits) the allocator performs
+**copy-on-write**: the request gets a private copy and the engine
+replays the pool bytes via :meth:`drain_copies`.
 
 The physical page id is the unit the whole memory-system story shares:
 
@@ -13,7 +26,10 @@ The physical page id is the unit the whole memory-system story shares:
 * the NSB hot-set accounting (``capture.PageCache``) is keyed by the same
   physical ids, and
 * the capture recorder (``capture.PageStream``) tags those ids per
-  request/step so the NVR simulator replays the allocator's actual layout.
+  request/step so the NVR simulator replays the allocator's actual
+  layout — with prefix caching on, genuinely *shared* physical ids, so
+  NSB hit rate and NVR miss reduction are measured on the real reuse
+  structure of multi-tenant traffic.
 
 Physical page 0 is reserved as a scratch/null page: padded batch rows and
 masked prefill positions write there, so the jitted model functions never
@@ -22,36 +38,63 @@ need data-dependent shapes.  The allocator never hands page 0 out.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
 NULL_PAGE = 0
 
+_CHAIN_SEED = 0x9E3779B9
+
 
 @dataclass
 class AllocatorStats:
     allocs: int = 0
     frees: int = 0
-    alloc_failures: int = 0
+    alloc_failures: int = 0    # ensure() growth failures (preempt trigger)
+    admission_blocks: int = 0  # ensure_prompt() refusals (HOL polling)
     peak_in_use: int = 0
+    prefix_hits: int = 0       # pages attached from the prefix index
+    prefix_evictions: int = 0  # cached pages reclaimed for fresh allocs
+    cow_copies: int = 0        # shared pages privatised before a write
 
 
 class KVBlockAllocator:
-    """Free-list allocator over ``n_pages`` physical KV pages.
+    """Free-list + prefix-cache allocator over ``n_pages`` physical pages.
 
     ``n_pages`` includes the reserved scratch page 0, so ``capacity`` —
     the number of allocatable pages — is ``n_pages - 1``.
+
+    Page lifecycle: free -> referenced (refcount >= 1, possibly by
+    several requests sharing a prompt prefix) -> either free again, or —
+    when the page's content is registered in the prefix index — *cached*
+    (refcount 0, content retained, LRU-evictable).  ``pages_free`` counts
+    everything reclaimable (free list + cached LRU), so admission-control
+    arithmetic is unchanged by caching.
     """
 
-    def __init__(self, n_pages: int, page_tokens: int) -> None:
+    def __init__(self, n_pages: int, page_tokens: int,
+                 prefix_cache: bool = True) -> None:
         if n_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.n_pages = n_pages
         self.page_tokens = page_tokens
+        self.prefix_cache = prefix_cache
         # pop() from the end -> low page ids are handed out first
         self._free = list(range(n_pages - 1, NULL_PAGE, -1))
         self._tables: dict[int, list[int]] = {}
+        self._ref: dict[int, int] = {}                 # page -> refcount
+        # content-addressing: chain key -> (page, token tuple); the token
+        # tuple is compared on attach, so a hash collision can never
+        # splice the wrong content into a request
+        self._index: dict[int, tuple[int, tuple]] = {}
+        self._page_key: dict[int, int] = {}            # page -> chain key
+        self._cached: OrderedDict[int, None] = OrderedDict()
+        # rid -> (pages registered so far, chain key at that depth):
+        # register_prefix resumes here instead of re-hashing the prompt
+        self._reg_state: dict[int, tuple[int, int]] = {}
+        self._pending_copies: list[tuple[int, int]] = []
         self.stats = AllocatorStats()
 
     # -- capacity ------------------------------------------------------------
@@ -62,11 +105,21 @@ class KVBlockAllocator:
 
     @property
     def pages_free(self) -> int:
-        return len(self._free)
+        """Reclaimable pages: the free list plus cached-but-unreferenced
+        pages (evictable, so they count as available for admission)."""
+        return len(self._free) + len(self._cached)
 
     @property
     def pages_in_use(self) -> int:
+        """Pages referenced by at least one live request."""
         return self.capacity - self.pages_free
+
+    @property
+    def pages_cached(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def pages_for_tokens(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_tokens)
@@ -84,11 +137,52 @@ class KVBlockAllocator:
         bt[: len(pages)] = pages[:n_logical]
         return bt
 
-    def ensure(self, rid: int, n_tokens: int) -> bool:
-        """Grow ``rid``'s block table to cover ``n_tokens`` positions.
+    # -- page plumbing -------------------------------------------------------
 
-        All-or-nothing: returns False (and allocates nothing) if the free
-        list cannot supply every page needed.
+    def _take_page(self) -> int:
+        """One reclaimable page (caller has checked availability): free
+        list first, then evict the least-recently-parked cached page."""
+        if self._free:
+            return self._free.pop()
+        page, _ = self._cached.popitem(last=False)
+        key = self._page_key.pop(page)
+        del self._index[key]
+        self.stats.prefix_evictions += 1
+        return page
+
+    def _release_ref(self, page: int) -> None:
+        self._ref[page] -= 1
+        if self._ref[page]:
+            return
+        del self._ref[page]
+        if page in self._page_key:
+            # content survives for future prefix attaches, LRU order
+            self._cached[page] = None
+            self._cached.move_to_end(page)
+        else:
+            self._free.append(page)
+
+    def _chain_keys(self, tokens, n_pages: int):
+        """``(key, chunk)`` per full page of ``tokens``: key i hashes the
+        chain of pages [0..i], so equal keys mean equal prefix *and*
+        equal absolute positions (RoPE-safe sharing)."""
+        pt = self.page_tokens
+        out = []
+        h = _CHAIN_SEED
+        for i in range(n_pages):
+            chunk = tuple(int(t) for t in tokens[i * pt:(i + 1) * pt])
+            h = hash((h, chunk))
+            out.append((h, chunk))
+        return out
+
+    # -- allocation ----------------------------------------------------------
+
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        """Grow ``rid``'s block table to cover ``n_tokens`` positions
+        with freshly-allocated private pages.
+
+        All-or-nothing: returns False (and allocates nothing) if the
+        reclaimable pages cannot supply every page needed.
         """
         need = self.pages_for_tokens(n_tokens) - len(self.table(rid))
         if need <= 0:
@@ -96,20 +190,141 @@ class KVBlockAllocator:
         if need > self.pages_free:
             self.stats.alloc_failures += 1
             return False
-        pages = [self._free.pop() for _ in range(need)]
+        pages = [self._take_page() for _ in range(need)]
+        for p in pages:
+            self._ref[p] = 1
         self._tables[rid].extend(pages)
         self.stats.allocs += need
         self.stats.peak_in_use = max(self.stats.peak_in_use,
                                      self.pages_in_use)
         return True
 
+    def ensure_prompt(self, rid: int, tokens) -> tuple[bool, int]:
+        """Reserve every page of a prompt, attaching cached prefix pages.
+
+        Walks the token-hash chain of full pages from the request's
+        current frontier: each chain hit *attaches* the cached physical
+        page (refcount++, zero fresh pages charged); the first miss ends
+        the chain and the remainder is allocated fresh.  If the chain
+        covers the *entire* prompt, the last page is immediately
+        copied-on-write so the frontier token's recompute (needed to
+        produce logits) never writes into a shared page.
+
+        All-or-nothing over the fresh pages; returns ``(ok,
+        cached_tokens)`` where ``cached_tokens`` is how far the KV
+        frontier can fast-forward (pool content already materialised).
+        """
+        tokens = np.asarray(tokens).reshape(-1)
+        n_tokens = len(tokens)
+        total = self.pages_for_tokens(n_tokens)
+        table = self.table(rid)
+        have = len(table)
+        if total <= have:
+            return True, 0
+        attach: list[tuple[int, int]] = []             # (page, key)
+        if self.prefix_cache:
+            keys = self._chain_keys(tokens, min(total, n_tokens
+                                                // self.page_tokens))
+            for i in range(have, len(keys)):
+                key, chunk = keys[i]
+                hit = self._index.get(key)
+                if hit is None or hit[1] != chunk:
+                    break
+                attach.append((hit[0], key))
+        def _avail() -> int:
+            return (len(self._free) + len(self._cached)
+                    - sum(1 for p, _ in attach if p in self._cached))
+
+        fresh = total - have - len(attach)
+        full_hit = have + len(attach) == total
+        if full_hit and attach:
+            fresh += 1                                 # COW of the tail page
+            if fresh > _avail():
+                # the COW page may only be missing because every
+                # reclaimable page is one we meant to attach: degrade to
+                # attaching one page fewer and *prefilling* the tail
+                attach.pop()
+                fresh = total - have - len(attach)
+                full_hit = False
+        if fresh > _avail():
+            # a blocked queue head polls this every scheduler tick:
+            # tracked separately so alloc_failures keeps meaning
+            # "mid-stream growth failed" (the preemption trigger)
+            self.stats.admission_blocks += 1
+            return False, 0
+        for p, _ in attach:
+            self._cached.pop(p, None)
+            self._ref[p] = self._ref.get(p, 0) + 1
+            table.append(p)
+            self.stats.prefix_hits += 1
+        if full_hit and attach:
+            shared = table[-1]
+            private = self._take_page()
+            self._ref[private] = 1
+            self._pending_copies.append((shared, private))
+            table[-1] = private
+            self._release_ref(shared)
+            self.stats.cow_copies += 1
+            self.stats.allocs += 1
+            fresh -= 1
+        for _ in range(fresh):
+            p = self._take_page()
+            self._ref[p] = 1
+            table.append(p)
+            self.stats.allocs += 1
+        self.stats.peak_in_use = max(self.stats.peak_in_use,
+                                     self.pages_in_use)
+        cached = min(len(attach) * self.page_tokens, n_tokens)
+        return True, cached
+
+    def drain_copies(self) -> list[tuple[int, int]]:
+        """Pending ``(src, dst)`` copy-on-write pool copies; the engine
+        must replay these on k/v/summary pools *before* running any
+        prefill/decode that reads the destination pages."""
+        out = self._pending_copies
+        self._pending_copies = []
+        return out
+
+    # -- the prefix index ----------------------------------------------------
+
+    def register_prefix(self, rid: int, tokens, n_computed: int) -> int:
+        """Publish ``rid``'s fully-materialised whole prompt pages into
+        the prefix index (call *after* their KV is written to the pool).
+        Idempotent; an existing registration for the same content wins.
+        Returns the number of newly-registered pages."""
+        if not self.prefix_cache:
+            return 0
+        tokens = np.asarray(tokens).reshape(-1)
+        n_full = min(n_computed, len(tokens)) // self.page_tokens
+        table = self._tables.get(rid, [])
+        n_full = min(n_full, len(table))
+        done, h = self._reg_state.get(rid, (0, _CHAIN_SEED))
+        pt = self.page_tokens
+        new = 0
+        for i in range(done, n_full):
+            chunk = tuple(int(t) for t in tokens[i * pt:(i + 1) * pt])
+            h = hash((h, chunk))
+            page = table[i]
+            if h not in self._index and page not in self._page_key:
+                self._index[h] = (page, chunk)
+                self._page_key[page] = h
+                new += 1
+        if n_full > done:
+            self._reg_state[rid] = (n_full, h)
+        return new
+
+    # -- release -------------------------------------------------------------
+
     def free_request(self, rid: int) -> list[int]:
-        """Release every page ``rid`` owns; returns the freed ids."""
+        """Drop every reference ``rid`` holds; returns the released ids.
+        Shared pages stay live for their other holders; registered pages
+        whose refcount hits 0 park in the cached LRU, the rest return to
+        the free list (LIFO, keeping hot physical ids dense)."""
         pages = self._tables.pop(rid, [])
+        self._reg_state.pop(rid, None)     # a resume rebuilds its table
         self.stats.frees += len(pages)
-        # LIFO reuse keeps the hot physical ids dense, which is what the
-        # NSB hot-set model rewards (recently-freed pages are re-touched)
-        self._free.extend(reversed(pages))
+        for p in reversed(pages):
+            self._release_ref(p)
         return pages
 
     def owned(self, rid: int) -> int:

@@ -8,6 +8,18 @@ scale.  Admission is strict FIFO with head-of-line blocking: a request is
 only admitted when the paged allocator can hold its whole prompt, and the
 queue head is never skipped in favour of a smaller later request.
 
+Admission *reserves*: ``_admit`` allocates the entire prompt's pages
+(all-or-nothing ``ensure_prompt``, attaching cached prefix pages for
+free) at admission time, and decode allocation runs *before* admission in
+``schedule()`` — so a request can never be admitted and then evicted by
+the same iteration's decode steps (the admitted request holds the highest
+``admission_seq`` and would otherwise be the preferred victim,
+admit->evict churn that inflates ``n_preemptions``).  Prefix-cached
+prompt pages fast-forward the request's KV frontier (``computed``) past
+content another request already materialised — clamped one token short of
+the prompt end, so the final prefill chunk always runs and produces the
+first-token logits.
+
 Preemption: when a decode step needs a fresh KV page and the pool is
 exhausted, the most-recently-admitted running request is evicted
 (recompute policy — its pages are freed and it re-enters the *front* of
@@ -63,6 +75,7 @@ class Request:
     first_token_at: float = -1.0
     finished_at: float = -1.0
     n_preemptions: int = 0
+    cached_tokens: int = 0          # prompt tokens skipped, last admission
     last_logits: np.ndarray | None = None
 
     @property
@@ -162,6 +175,7 @@ class Scheduler:
         self.running: list[Request] = []
         self._admission_seq = 0
         self.n_preemptions = 0
+        self.prefill_tokens_skipped = 0   # prefix-cache fast-forwards
 
     # -- queue interface -----------------------------------------------------
 
@@ -206,11 +220,20 @@ class Scheduler:
         admitted = []
         while (self.waiting and len(self.running) < self.max_running):
             head = self.waiting[0]
-            need = self.allocator.pages_for_tokens(head.prompt_len)
-            if need > self.allocator.pages_free:
+            # reserve the whole prompt now (all-or-nothing, cached prefix
+            # pages attach for free): an admitted request can never lose
+            # its prompt pages to this iteration's other allocations
+            ok, cached = self.allocator.ensure_prompt(head.rid, head.prompt)
+            if not ok:
                 break  # head-of-line blocking keeps admission FIFO
             self.waiting.popleft()
             head.state = RequestState.RUNNING
+            # fast-forward past prefix-cached pages, keeping the last
+            # prompt token to recompute: its prefill produces the
+            # first-token logits (its page was COW'd on a full hit)
+            head.computed = min(cached, head.prompt_len - 1)
+            head.cached_tokens = head.computed
+            self.prefill_tokens_skipped += head.computed
             # a resumed (previously preempted) request keeps its original
             # admission_seq so it cannot be victimised by requests it
             # used to outrank
@@ -227,17 +250,18 @@ class Scheduler:
     def schedule(self, now: float = 0.0) -> IterationPlan:
         """Build one iteration's mixed prefill/decode plan.
 
-        Decode steps are scheduled first (latency priority), then prefill
-        chunks of already-running requests, then new admissions — all
-        under ``token_budget`` scheduled tokens and ``max_batch`` decode
-        rows per iteration.
+        Decode steps are scheduled first (latency priority — and so their
+        page allocations precede admission), then new admissions (whole
+        prompts reserved), then prefill chunks — all under
+        ``token_budget`` scheduled tokens and ``max_batch`` decode rows
+        per iteration.
         """
         plan = IterationPlan()
         budget = self.token_budget
 
-        self._admit(now)
-
-        # decode / replay steps: requests past their prompt frontier
+        # decode / replay steps: requests past their prompt frontier.
+        # These run BEFORE admission so a decode page grab can never
+        # victimise a request admitted in this very iteration.
         for req in sorted(self.running, key=lambda r: r.admission_seq):
             if req not in self.running or req.in_prefill or budget <= 0:
                 continue
@@ -248,7 +272,11 @@ class Scheduler:
             plan.decode.append(req)
             budget -= 1
 
-        # prefill chunks for running requests still materialising prompts
+        self._admit(now)
+
+        # prefill chunks for running requests still materialising
+        # prompts (their pages are already reserved from admission, so
+        # the ensure below is a no-op safety net, never an eviction)
         for req in sorted(self.running, key=lambda r: r.admission_seq):
             if req not in self.running or not req.in_prefill or budget <= 0:
                 continue

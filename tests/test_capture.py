@@ -24,6 +24,25 @@ class TestPageStream:
         with pytest.raises(ValueError):
             st.to_trace()
 
+    def test_record_batched_drops_empty_rows_like_record(self):
+        """Regression: record() drops empty selections but
+        record_batched() used to append them, poisoning to_trace with
+        zero-length events."""
+        a = capture.PageStream("a", n_rows=8, row_bytes=64,
+                               compute_per_row=1.0)
+        b = capture.PageStream("b", n_rows=8, row_bytes=64,
+                               compute_per_row=1.0)
+        empty = np.zeros((2, 3, 0), dtype=np.int64)
+        a.record_batched(empty, rid=1, step=2)
+        for _ in range(2 * 3):
+            b.record(np.zeros((0,), dtype=np.int64), rid=1, step=2)
+        assert a.n_events == b.n_events == 0
+        assert a.rids == b.rids == []
+        # non-empty rows still recorded, tags intact
+        a.record_batched(np.arange(6).reshape(2, 3), rid=4, step=5)
+        assert a.n_events == 2 and a.rids == [4, 4]
+        a.to_trace()                         # lowers clean
+
     def test_to_trace_bundle_shape(self):
         st = capture.PageStream("t", n_rows=32, row_bytes=256,
                                 compute_per_row=2.0)
@@ -57,6 +76,28 @@ class TestMoEAdapter:
         # every recorded row belongs to one expert's weight slab
         for ev in st.events:
             assert len({int(r) // 256 for r in ev}) == 1
+
+    def test_small_dff_stays_in_expert_slab(self):
+        """Regression: with d_ff <= tile_rows the unclamped tile spilled
+        into the next expert's rows (and past n_rows for the last
+        expert)."""
+        eids = np.repeat(np.arange(4), 40)       # every expert routed
+        st = capture.moe_expert_stream(eids, n_experts=4, d_model=64,
+                                       d_ff=16, tile_rows=32)
+        assert st.n_rows == 4 * 16
+        for ev in st.events:
+            experts = {int(r) // 16 for r in ev}
+            assert len(experts) == 1             # one expert's slab only
+            assert ev.min() >= 0 and ev.max() < st.n_rows
+
+    def test_tile_never_exceeds_table(self):
+        for d_ff in (8, 32, 33, 256):
+            st = capture.moe_expert_stream(np.zeros(100), n_experts=2,
+                                           d_model=32, d_ff=d_ff,
+                                           tile_rows=32)
+            for ev in st.events:
+                assert ev.max() < st.n_rows
+                assert len(ev) == min(32, d_ff)
 
     def test_nvr_covers_routed_traffic(self):
         rng = np.random.default_rng(1)

@@ -12,6 +12,7 @@ from repro.core.nvr.machine import Cache, DRAM, LINE_BYTES
 from repro.kernels import coalesce_indices, ops
 from repro.models import layers
 from repro.optim import compress
+from repro.serve.kv_allocator import NULL_PAGE, KVBlockAllocator
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -32,6 +33,78 @@ def test_cache_capacity_invariant(lines, ways):
     held = sum(len(s) for s in c.sets)
     assert held <= c.num_sets * ways
     assert c.probe(lines[-1], t + 10) is not None
+
+
+# four prompts with heavy prefix overlap, so attach/refcount paths fire
+_ALLOC_PROMPTS = [
+    np.arange(100, 100 + 12),
+    np.arange(100, 100 + 15),              # shares 3 whole pages with [0]
+    np.concatenate([np.arange(100, 108), [7, 8, 9, 10]]),  # 2 shared pages
+    np.arange(200, 200 + 8),               # disjoint
+]
+
+_alloc_op = st.one_of(
+    st.tuples(st.just("prompt"), st.integers(0, 3), st.integers(0, 3)),
+    st.tuples(st.just("ensure"), st.integers(0, 3), st.integers(1, 20)),
+    st.tuples(st.just("register"), st.integers(0, 3), st.integers(0, 0)),
+    st.tuples(st.just("free"), st.integers(0, 3), st.integers(0, 0)),
+)
+
+
+def _alloc_invariants(al: KVBlockAllocator) -> None:
+    held: dict = {}
+    for rid, table in al._tables.items():
+        assert NULL_PAGE not in table, "NULL page handed out"
+        for p in table:
+            held[p] = held.get(p, 0) + 1
+    # every held page is refcounted exactly as many times as it appears
+    # across tables (a page in two tables only via a counted attach —
+    # never a double allocation)
+    assert held == al._ref
+    live = set(held)
+    assert live.isdisjoint(al._free)
+    assert live.isdisjoint(al._cached)
+    assert set(al._cached).isdisjoint(al._free)
+    assert al.pages_in_use + al.pages_free == al.capacity
+    assert al.pages_in_use == len(live)
+    for rid in al._tables:
+        bt = al.table_array(rid, 16)
+        assert all(bt[al.owned(rid):] == NULL_PAGE)
+
+
+@SET
+@given(st.lists(_alloc_op, min_size=1, max_size=60), st.integers(4, 12))
+def test_kv_allocator_refcount_invariants(ops_list, n_pages):
+    """Random ensure/prefix-attach/register/free sequences: never hand
+    out NULL_PAGE, never double-allocate a live page, conservation of
+    pages, NULL padding beyond the owned table."""
+    al = KVBlockAllocator(n_pages=n_pages, page_tokens=4)
+    assigned: dict = {}                     # rid -> prompt in its table
+    for kind, rid, arg in ops_list:
+        if kind == "prompt":
+            prompt = assigned.get(rid, _ALLOC_PROMPTS[arg])
+            ok, cached = al.ensure_prompt(rid, prompt)
+            if ok:
+                assigned[rid] = prompt
+                assert cached <= len(prompt)
+        elif kind == "ensure":
+            before = al.owned(rid)
+            if al.ensure(rid, arg):
+                assert al.owned(rid) >= before
+        elif kind == "register":
+            if rid in assigned:
+                p = assigned[rid]
+                al.register_prefix(rid, p, al.owned(rid)
+                                   * al.page_tokens)
+        elif kind == "free":
+            al.free_request(rid)
+            assigned.pop(rid, None)
+        al.drain_copies()                   # keep the COW queue bounded
+        _alloc_invariants(al)
+    for rid in list(al._tables):
+        al.free_request(rid)
+    _alloc_invariants(al)
+    assert al.pages_in_use == 0
 
 
 @SET

@@ -54,6 +54,114 @@ class TestAllocator:
         assert all(bt[2:] == NULL_PAGE)
 
 
+class TestPrefixCacheAllocator:
+    def _prompt(self, n, base=100):
+        return np.arange(base, base + n)
+
+    def test_attach_shares_pages_and_refcounts(self):
+        al = KVBlockAllocator(n_pages=16, page_tokens=4)
+        p = self._prompt(10)                 # 2 full pages + 1 partial
+        ok, cached = al.ensure_prompt(0, p)
+        assert ok and cached == 0            # nothing registered yet
+        al.register_prefix(0, p, 10)         # 2 full pages published
+        free_before = al.pages_free
+        ok, cached = al.ensure_prompt(1, p)
+        assert ok and cached == 8            # both full pages attached
+        assert al.table(1)[:2] == al.table(0)[:2]
+        assert al.table(1)[2] != al.table(0)[2]     # partial page private
+        assert al.refcount(al.table(0)[0]) == 2
+        assert al.stats.prefix_hits == 2
+        # only the private tail page was charged
+        assert free_before - al.pages_free == 1
+
+    def test_full_hit_cows_tail_page(self):
+        al = KVBlockAllocator(n_pages=16, page_tokens=4)
+        p = self._prompt(8)                  # exactly 2 pages
+        al.ensure_prompt(0, p)
+        al.register_prefix(0, p, 8)
+        ok, cached = al.ensure_prompt(1, p)
+        assert ok and cached == 8
+        assert al.table(1)[0] == al.table(0)[0]
+        assert al.table(1)[1] != al.table(0)[1]     # COW'd private copy
+        assert al.stats.cow_copies == 1
+        assert al.drain_copies() == [(al.table(0)[1], al.table(1)[1])]
+        assert al.drain_copies() == []              # drained once
+        assert al.refcount(al.table(0)[1]) == 1     # shared ref dropped
+
+    def test_release_parks_registered_pages_in_lru(self):
+        al = KVBlockAllocator(n_pages=8, page_tokens=4)
+        p = self._prompt(8)
+        al.ensure_prompt(0, p)
+        al.register_prefix(0, p, 8)
+        pages = list(al.table(0))
+        al.free_request(0)
+        assert al.pages_in_use == 0
+        assert al.pages_cached == 2          # retained, not freed
+        assert al.pages_free == al.capacity  # but still reclaimable
+        # a later identical prompt re-attaches the cached pages
+        ok, cached = al.ensure_prompt(1, p)
+        assert ok and cached == 8
+        assert al.table(1)[0] == pages[0]
+
+    def test_lru_eviction_when_free_list_empty(self):
+        al = KVBlockAllocator(n_pages=6, page_tokens=4)   # 5 allocatable
+        a, b = self._prompt(4, 0), self._prompt(4, 50)
+        al.ensure_prompt(0, a)
+        al.register_prefix(0, a, 4)
+        al.free_request(0)                   # page cached (LRU oldest)
+        al.ensure_prompt(1, b)
+        al.register_prefix(1, b, 4)
+        al.free_request(1)                   # page cached (LRU newest)
+        assert al.pages_cached == 2
+        assert al.ensure(2, 20)              # 5 pages: must evict both
+        assert al.stats.prefix_evictions == 2
+        assert al.pages_cached == 0
+        # the evicted content is gone from the index
+        ok, cached = al.ensure_prompt(3, a)
+        assert not ok and cached == 0        # pool exhausted, no attach
+
+    def test_full_hit_degrades_when_cow_page_unavailable(self):
+        """If every reclaimable page is one the prompt would attach, a
+        full hit must degrade (attach one page fewer, prefill the tail)
+        rather than spuriously refuse admission."""
+        al = KVBlockAllocator(n_pages=4, page_tokens=4)   # 3 allocatable
+        p = self._prompt(8)                  # exactly 2 pages
+        al.ensure_prompt(0, p)
+        al.register_prefix(0, p, 8)
+        al.ensure(1, 4)                      # a bystander holds page 3
+        al.free_request(0)                   # both prompt pages cached
+        assert al.pages_free == 2
+        ok, cached = al.ensure_prompt(2, p)
+        assert ok and cached == 4            # first page attached...
+        assert al.stats.cow_copies == 0      # ...tail prefills, not COWs
+        assert al.owned(2) == 2
+        assert al.stats.admission_blocks == 0
+
+    def test_prefix_cache_disabled(self):
+        al = KVBlockAllocator(n_pages=16, page_tokens=4, prefix_cache=False)
+        p = self._prompt(8)
+        al.ensure_prompt(0, p)
+        assert al.register_prefix(0, p, 8) == 0
+        ok, cached = al.ensure_prompt(1, p)
+        assert ok and cached == 0
+        assert set(al.table(0)).isdisjoint(al.table(1))
+        al.free_request(0)
+        assert al.pages_cached == 0
+
+    def test_chain_key_is_position_sensitive(self):
+        """The same page content at a different prefix depth must not
+        attach (RoPE makes KV position-dependent)."""
+        al = KVBlockAllocator(n_pages=16, page_tokens=4)
+        p0 = np.array([1, 2, 3, 4, 5, 6, 7, 8])
+        al.ensure_prompt(0, p0)
+        al.register_prefix(0, p0, 8)
+        # p1's first page equals p0's SECOND page content
+        p1 = np.array([5, 6, 7, 8])
+        ok, cached = al.ensure_prompt(1, p1)
+        assert ok and cached == 0
+        assert al.table(1)[0] not in al.table(0)
+
+
 def _mk(rid, plen, gen, arrival=0.0):
     return Request(rid=rid, prompt=np.arange(plen), max_new_tokens=gen,
                    arrival=arrival)
@@ -152,6 +260,39 @@ class TestScheduler:
         ids = [r.rid for r in s.waiting]
         assert ids.index(1) < ids.index(2) if 2 in ids else True
 
+    def test_admit_never_thrashes_same_iteration(self):
+        """A schedule() call must never preempt a request it just
+        admitted: admission reserves the whole prompt and runs after
+        decode allocation, so the fresh admittee (highest admission_seq,
+        the preferred victim) cannot be evicted by the same iteration."""
+        al = KVBlockAllocator(n_pages=5, page_tokens=4)   # 4 allocatable
+        s = Scheduler(al, max_batch=2, chunk=8, token_budget=16)
+        r0 = _mk(0, 8, 4)                    # 2 prompt pages, grows to 3
+        s.add(r0)
+        _drive(s, 1.0)                       # r0 prefilled, enters decode
+        r1 = _mk(1, 8, 2)                    # 2 prompt pages
+        s.add(r1)
+        # this iteration r0's decode grabs a 3rd page, leaving 1 free:
+        # r1 must be blocked at admission, NOT admitted-then-evicted
+        plan = s.schedule(2.0)
+        assert [r.rid for r in plan.decode] == [0]
+        assert al.owned(0) == 3
+        assert r1.n_preemptions == 0
+        assert r1.state is RequestState.WAITING
+        assert r1.admission_seq == -1        # never admitted, not churned
+        assert s.n_preemptions == 0
+
+    def test_admission_reserves_whole_prompt(self):
+        al = KVBlockAllocator(n_pages=9, page_tokens=4)
+        s = Scheduler(al, max_batch=2, chunk=4, token_budget=16)
+        r0 = _mk(0, 16, 2)                   # 4 pages
+        s.add(r0)
+        s.schedule(0.0)
+        # all prompt pages held from the first iteration, before any
+        # prefill chunk ran
+        assert al.owned(0) == 4
+        assert r0.computed == 0              # nothing cached: no skip
+
     def test_mixed_plan_respects_budget(self):
         al = KVBlockAllocator(n_pages=33, page_tokens=4)
         s = Scheduler(al, max_batch=4, chunk=8, token_budget=10)
@@ -216,7 +357,9 @@ class TestPagedEngine:
         replay must reproduce the unpressured run bit-for-bit."""
         cfg, params, work = setup
         calm = self._run(cfg, params, work, 0)
-        tight = self._run(cfg, params, work, 1 + 8)   # 8 pages: pressure
+        # 11 pages hold every concurrent prompt (admission reserves whole
+        # prompts now) but not the decode growth -> eviction mid-stream
+        tight = self._run(cfg, params, work, 1 + 11)
         assert calm.scheduler.n_preemptions == 0
         assert tight.scheduler.n_preemptions > 0
         for rid in calm.requests:
@@ -269,3 +412,113 @@ class TestPagedEngine:
                           max_batch=2, chunk=8)
         with pytest.raises(ValueError):
             eng.submit(np.arange(1, 30), max_new_tokens=10)
+
+
+@pytest.mark.slow
+class TestPrefixCacheEngine:
+    """Acceptance: cross-request prefix sharing costs zero model FLOPs
+    for cached pages while per-request logits stay bitwise-identical to
+    the uncached run — including under forced preemption of a request
+    holding shared pages — and the captured COW traffic replays through
+    the simulator end-to-end."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import api
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(11)
+        # two system prompts (3 whole pages each at kv_page=4), short
+        # user suffixes: the multi-tenant shared-prefix shape
+        sys_prompts = [rng.integers(1, cfg.vocab, size=12) for _ in range(2)]
+        work = []
+        for i in range(6):
+            suffix = rng.integers(1, cfg.vocab, size=int(rng.integers(2, 6)))
+            prompt = np.concatenate([sys_prompts[i % 2], suffix])
+            work.append((float(i) * 0.5, prompt, 5))
+        return cfg, params, work
+
+    def _run(self, cfg, params, work, n_pages=0, prefix_cache=True,
+             capture=False):
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
+                          max_batch=4, chunk=8, nsb_pages=32,
+                          prefix_cache=prefix_cache, capture_trace=capture)
+        eng.run([(t, p.copy(), g) for t, p, g in work])
+        return eng
+
+    def test_shared_prefix_skips_prefill_bitwise_identical(self, setup):
+        cfg, params, work = setup
+        base = self._run(cfg, params, work, prefix_cache=False)
+        cached = self._run(cfg, params, work, prefix_cache=True)
+        assert cached.allocator.stats.prefix_hits > 0
+        assert cached.scheduler.prefill_tokens_skipped > 0
+        assert (cached.stats.prefill_tokens
+                == base.stats.prefill_tokens
+                - cached.scheduler.prefill_tokens_skipped)
+        for rid in base.requests:
+            a, b = base.requests[rid], cached.requests[rid]
+            assert a.out_tokens == b.out_tokens
+            assert np.array_equal(a.last_logits, b.last_logits)
+            assert b.first_token_at <= a.first_token_at    # TTFT no worse
+
+    def test_identical_prompt_full_hit_triggers_cow(self, setup):
+        cfg, params, _ = setup
+        rng = np.random.default_rng(13)
+        prompt = rng.integers(1, cfg.vocab, size=16)   # page-aligned
+        # second arrival lands after the first prompt is fully
+        # registered -> whole-prompt cache hit -> tail-page COW
+        work = [(0.0, prompt, 4), (4.0, prompt.copy(), 4)]
+        base = self._run(cfg, params, work, prefix_cache=False)
+        cached = self._run(cfg, params, work, prefix_cache=True)
+        assert cached.allocator.stats.cow_copies >= 1
+        assert cached.stats.cow_page_copies >= 1       # pool bytes moved
+        for rid in base.requests:
+            a, b = base.requests[rid], cached.requests[rid]
+            assert a.out_tokens == b.out_tokens
+            assert np.array_equal(a.last_logits, b.last_logits)
+
+    def test_preemption_of_shared_pages_bitwise_identical(self, setup):
+        """Force eviction of requests whose tables hold shared pages;
+        recompute + re-attach must still reproduce the uncached run."""
+        cfg, params, work = setup
+        base = self._run(cfg, params, work, prefix_cache=False)
+        tight = self._run(cfg, params, work, n_pages=1 + 9,
+                          prefix_cache=True)
+        assert tight.scheduler.n_preemptions > 0
+        assert tight.allocator.stats.prefix_hits > 0
+        for rid in base.requests:
+            a, b = base.requests[rid], tight.requests[rid]
+            assert a.out_tokens == b.out_tokens
+            assert np.array_equal(a.last_logits, b.last_logits)
+
+    def test_captured_cow_traffic_replays_end_to_end(self, setup):
+        from repro.core.nvr import run_modes
+
+        cfg, params, work = setup
+        eng = self._run(cfg, params, work, prefix_cache=True, capture=True)
+        st = eng.recorder
+        assert st.n_events > 0
+        # genuinely shared physical ids: some page appears in the
+        # selection streams of two different requests
+        by_rid = {rid: set(np.concatenate(
+            [e for _, e in st.events_for(rid)]))
+            for rid in st.request_ids()}
+        rids = list(by_rid)
+        assert any(by_rid[a] & by_rid[b]
+                   for i, a in enumerate(rids) for b in rids[i + 1:])
+        rs = {r.label: r for r in run_modes(st.to_trace(), 2)}
+        assert rs["inorder"].demand_misses > 0
+        assert rs["nvr"].demand_misses < rs["inorder"].demand_misses
+
+    def test_pool_drains_and_cache_parks(self, setup):
+        cfg, params, work = setup
+        eng = self._run(cfg, params, work, prefix_cache=True)
+        assert eng.allocator.pages_in_use == 0
+        assert eng.allocator.pages_cached > 0
+        assert eng.allocator.pages_free == eng.allocator.capacity
