@@ -60,6 +60,42 @@ def main():
                  f"dense_us={us_dense:.0f};kv_bytes_ratio="
                  f"{bytes_dense / bytes_sparse:.1f}x"))
 
+    # paged sparse decode on the serve layer's block-table layout: the
+    # same TopK computation as above, but on the [P,page,KV,D] physical
+    # pool + per-request block tables the continuous-batching engine
+    # actually produces (contiguous [B,S,KV,D] never exists there) — so
+    # kernel numbers and serve_bench numbers are comparable
+    from repro.models import sparse_attention
+
+    r, nl, pp = 8, s // page, 1 + 8 * (s // page)
+    kpool = jnp.asarray(rng.normal(size=(pp, page, hkv, d)), jnp.bfloat16)
+    vpool = jnp.asarray(rng.normal(size=(pp, page, hkv, d)), jnp.bfloat16)
+    spool = jnp.asarray(rng.normal(size=(pp, hkv, d)), jnp.float32)
+    bt = np.stack([rng.choice(np.arange(1, pp), size=nl, replace=False)
+                   for _ in range(r)])
+    qr = jnp.asarray(rng.normal(size=(r, hkv, g, d)), jnp.float32)
+    pos = jnp.asarray(rng.integers(page, nl * page, size=r), jnp.int32)
+    n_valid = pos // page + 1
+    idx_bt, phys = sparse_attention.select_pages_blocktable(
+        qr, spool, jnp.asarray(bt), n_valid, p)
+
+    paged_fn = jax.jit(lambda q_, k_, v_, i_, ph_, po_:
+                       sparse_attention.attend_pages_paged(
+                           q_, k_, v_, i_, ph_, po_, page))
+    us_paged = timeit(paged_fn, qr, kpool, vpool, idx_bt, phys, pos)
+    # structural run + parity of the Pallas paged kernel on this layout
+    from repro.kernels import paged_decode_attn
+    got = paged_decode_attn(phys, idx_bt, pos, qr, kpool, vpool,
+                            page_size=page, interpret=True)
+    want = paged_fn(qr, kpool, vpool, idx_bt, phys, pos)
+    err = float(np.abs(np.asarray(got, np.float32)
+                       - np.asarray(want, np.float32)).max())
+    assert err < 1e-5, f"paged kernel parity: {err}"
+    bytes_paged = r * hkv * p * page * d * 2 * 2
+    rows.append(("paged_decode_attn", us_paged,
+                 f"layout=blocktable_pool;pallas_parity_err={err:.1e};"
+                 f"kv_bytes_ratio={bytes_dense / bytes_paged:.1f}x"))
+
     # gather_spmm: ELL sparse vs dense matmul
     m, j, nin, n = 256, 16, 1024, 1024
     cols = jnp.asarray(rng.integers(0, nin, (m, j)), jnp.int32)

@@ -411,6 +411,14 @@ def prefix_bench():
     return _pb()
 
 
+def paged_kernel_bench():
+    """Donated + bucketed paged-decode step loop vs the pre-PR path,
+    with Pallas-kernel/XLA parity asserted in the same run (defined in
+    benchmarks/paged_kernel_bench.py; lazy import as above)."""
+    from .paged_kernel_bench import paged_kernel_bench as _pk
+    return _pk()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -424,4 +432,5 @@ ALL = {
     "capture_roundtrip": capture_roundtrip,  # serve/MoE capture -> sim
     "serve_bench": serve_bench,        # continuous batching vs lockstep
     "prefix_bench": prefix_bench,      # COW prefix cache on/off
+    "paged_kernel_bench": paged_kernel_bench,  # donated+bucketed decode
 }

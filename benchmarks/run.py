@@ -5,7 +5,7 @@ per-figure headline metrics vs the paper's claims.  Detailed per-row
 artifacts (paired CSV + JSON, via the engine sweep runner's writer) land
 in benchmarks/results/.
 
-Beyond the paper figures, five engineering benches ride along:
+Beyond the paper figures, six engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -16,6 +16,10 @@ Beyond the paper figures, five engineering benches ride along:
                       baseline, with multi-tenant capture -> NVR replay
   prefix_bench      — shared-system-prompt load with vs without the COW
                       prefix cache: prefill savings, TTFT, NVR replay
+  paged_kernel_bench — the donated + bucketed paged-decode step loop vs
+                      the pre-PR path (pool-copy / padded-row
+                      elimination), with Pallas paged-kernel parity
+                      asserted against the XLA oracle in the same run
 
 Exit status: 0 only if every requested benchmark ran clean; a benchmark
 that raises is reported (traceback + summary line) and the process exits

@@ -80,13 +80,19 @@ def _run_continuous(cfg, params, args):
     eng = PagedEngine(cfg, params, max_len=max_len, n_pages=args.pages,
                       max_batch=args.max_batch, chunk=args.chunk,
                       nsb_pages=args.nsb_pages, capture_trace=args.capture,
-                      prefix_cache=not args.no_prefix_cache)
+                      prefix_cache=not args.no_prefix_cache,
+                      kernel=args.kernel,
+                      donate_pools=not args.no_donate,
+                      row_bucketing=not args.no_buckets)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
           f"{m['iterations']} iterations ({m['tokens_out']} tokens, "
           f"{m['preemptions']} preemptions, peak "
           f"{m['pages_peak_in_use']}/{eng.allocator.capacity} pages)")
+    print(f"[serve-cb] step loop: {m['n_decode_traces']} decode traces "
+          f"({eng.kernel} kernel), {m['decode_rows_padded']} padded "
+          f"decode rows")
     print(f"[serve-cb] latency p50/p99 {m['p50_latency']:.0f}/"
           f"{m['p99_latency']:.0f} iters; TTFT p50/p99 "
           f"{m['p50_ttft']:.0f}/{m['p99_ttft']:.0f}")
@@ -135,6 +141,13 @@ def main(argv=None):
                         "independent random prompts)")
     p.add_argument("--no-prefix-cache", action="store_true",
                    help="disable cross-request COW prefix caching")
+    p.add_argument("--kernel", choices=("xla", "pallas"), default="xla",
+                   help="paged decode attention impl (pallas = fused "
+                        "runahead kernel; interpret mode off-TPU)")
+    p.add_argument("--no-donate", action="store_true",
+                   help="disable pool-buffer donation (pre-PR copies)")
+    p.add_argument("--no-buckets", action="store_true",
+                   help="pad every decode batch to --max-batch")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")

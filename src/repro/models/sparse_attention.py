@@ -23,9 +23,11 @@ from jax.sharding import PartitionSpec as P
 
 
 # int8 KV-cache quantisation (beyond-paper §Perf lever): fixed-scale
-# symmetric quant — RoPE preserves key norms, so a static scale suffices;
-# quality is checked in tests (corr > 0.99 vs bf16 at full coverage).
-KV_QSCALE = 16.0
+# symmetric quant; quality is checked in tests (corr > 0.99 vs bf16 at
+# full coverage).  The scale's canonical home is the kernel package —
+# the Pallas paged kernel dequantises with the same constant, and
+# kernels must not import the model stack.
+from ..kernels.paged_decode_attn import KV_QSCALE
 
 
 def kv_quant(x: jax.Array, dtype) -> jax.Array:
@@ -374,6 +376,26 @@ def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
          ).reshape(scores.shape)
     out = jnp.einsum("bkgpt,bkptd->bkgd", w, vg)
     return out.astype(q.dtype)
+
+
+def attend_pages_paged_kernel(q: jax.Array, k_pool_li: jax.Array,
+                              v_pool_li: jax.Array, idx: jax.Array,
+                              phys: jax.Array, pos: jax.Array, page: int,
+                              interpret: bool | None = None) -> jax.Array:
+    """Pallas-kernel twin of :func:`attend_pages_paged`.
+
+    Same signature, same masking semantics, same fp32 online-softmax
+    numerics (tolerance-level, not bitwise: the kernel streams pages
+    through a running max/sum while the XLA path materialises the full
+    gather then normalises once).  On TPU the selected pages are
+    scalar-prefetched and the grid pipeline double-buffers the indirect
+    page DMAs — the NVR runahead mechanism on the serve layer's native
+    block-table layout; off-TPU it runs in interpret mode.  The XLA path
+    stays the CPU fallback and the parity oracle.
+    """
+    from ..kernels.paged_decode_attn import paged_decode_attn
+    return paged_decode_attn(phys, idx, pos, q, k_pool_li, v_pool_li,
+                             page_size=page, interpret=interpret)
 
 
 def page_summary_from_pool(k_pool_li: jax.Array, phys: jax.Array,

@@ -12,7 +12,13 @@ through an admission queue (:mod:`.scheduler`), an iteration-level
 scheduler mixes prefill chunks and decode steps under a token budget, and
 the KV cache is a pool of physical pages managed by
 :class:`.kv_allocator.KVBlockAllocator` (block table per request,
-free-list, preempt-and-evict under pressure).  The *physical page id* is
+free-list, preempt-and-evict under pressure).  The step loop is the
+repo's serving fast path: pool buffers are *donated* into the decode and
+prefill jits (no per-call pool copy), ragged decode batches pad to
+power-of-two row buckets (O(log max_batch) traces, padded compute that
+tracks the live batch), and the decode attention can run either the XLA
+gather oracle or the fused Pallas runahead kernel
+(``kernels.paged_decode_attn``) on the same pool layout.  The *physical page id* is
 the shared currency across layers: the TopK paged-attention gather
 (``sparse_attention.select_pages_blocktable``), the NSB hot-set
 accounting (``capture.PageCache``), and the captured simulator trace
@@ -50,6 +56,7 @@ from ..configs.base import ArchConfig
 from ..core.nvr import capture
 from ..models import api, sparse_attention, transformer
 from ..models import layers as mlayers
+from . import scheduler as scheduler_mod
 from .kv_allocator import NULL_PAGE, KVBlockAllocator, PagePoolConfig
 from .scheduler import PrefillJob, Request, Scheduler
 
@@ -199,9 +206,11 @@ class PagedServeStats(ServeStats):
     preemptions: int = 0
     finished: int = 0
     cow_page_copies: int = 0
+    decode_rows_padded: int = 0     # NULL rows computed across the run
+    prefill_calls: int = 0          # executed prefill-chunk jit calls
 
 
-def _paged_decode_fn(cfg: ArchConfig):
+def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla"):
     """Build the jitted ragged decode step over the physical page pools.
 
     One call advances R requests by one token each: per-request positions
@@ -209,6 +218,12 @@ def _paged_decode_fn(cfg: ArchConfig):
     pages, page summaries recomputed exactly, TopK selection + gather by
     physical page id.  Padded rows carry block table NULLs and scribble
     the reserved scratch page 0.
+
+    ``kernel`` picks the attention implementation: ``"xla"`` is the
+    ``attend_pages_paged`` gather (runs everywhere; the parity oracle),
+    ``"pallas"`` is the fused ``kernels.paged_decode_attn`` runahead
+    kernel on the same pool layout (scalar-prefetched page ids,
+    double-buffered indirect DMAs; interpret mode off-TPU).
     """
     page = cfg.kv_page
     dt = jnp.dtype(cfg.param_dtype)
@@ -245,8 +260,12 @@ def _paged_decode_fn(cfg: ArchConfig):
             qh = q.reshape(r, cfg.n_kv_heads, g, cfg.hd)
             idx, phys = sparse_attention.select_pages_blocktable(
                 qh, sp_[li], bt, n_valid, k_sel)
-            o = sparse_attention.attend_pages_paged(
-                qh, kp_[li], vp_[li], idx, phys, pos, page)
+            if kernel == "pallas":
+                o = sparse_attention.attend_pages_paged_kernel(
+                    qh, kp_[li], vp_[li], idx, phys, pos, page)
+            else:
+                o = sparse_attention.attend_pages_paged(
+                    qh, kp_[li], vp_[li], idx, phys, pos, page)
             o = o.reshape(r, 1, cfg.n_heads, cfg.hd)
             xc = xc + mlayers.attn_out(o, lp, cfg.d_model)
             h2 = mlayers.rms_norm(xc, lp["ln2"], cfg.norm_eps)
@@ -349,6 +368,26 @@ class PagedEngine:
     cost zero model FLOPs while logits stay bitwise-identical to the
     uncached run (the final prompt token is always recomputed, on a
     copy-on-write private page when the whole prompt was cached).
+
+    Step-loop fast-path knobs (all default-on except the kernel):
+
+    * ``kernel="xla" | "pallas"`` — the decode attention implementation.
+      ``"xla"`` (default) is the ``attend_pages_paged`` gather: runs on
+      any backend and is the parity oracle the bitwise-resume guarantees
+      are pinned to.  ``"pallas"`` fuses gather + online-softmax in
+      ``kernels.paged_decode_attn`` with the TopK physical page ids
+      scalar-prefetched (the NVR runahead pipeline on the pool layout);
+      off-TPU it runs in interpret mode — parity is tolerance-level
+      (fp32 online softmax), not bitwise.
+    * ``donate_pools`` — donate the k/v/s pool buffers into the decode
+      and prefill jits, so XLA updates pages in place instead of copying
+      the full ``[L,P,page,KV,D]`` pools every call.
+    * ``row_bucketing`` — pad ragged decode batches to power-of-two row
+      buckets (NULL block-table rows) instead of always to
+      ``max_batch``: padded compute tracks the live batch while the
+      trace count stays O(log max_batch) (``metrics()["n_decode_traces"]``),
+      and the scheduler tops buckets up with budget-deferred rows
+      (free-slot decode).
     """
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 64,
@@ -356,7 +395,10 @@ class PagedEngine:
                  token_budget: int = 0, nsb_pages: int = 64,
                  capture_trace: bool = False,
                  kv_dtype_bytes: int = 2,
-                 prefix_cache: bool = True) -> None:
+                 prefix_cache: bool = True,
+                 kernel: str = "xla",
+                 donate_pools: bool = True,
+                 row_bucketing: bool = True) -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -365,6 +407,9 @@ class PagedEngine:
                 "PagedEngine requires the sparse-KV decode path")
         if max_len % cfg.kv_page:
             raise ValueError("max_len must be a multiple of cfg.kv_page")
+        if kernel not in ("xla", "pallas"):
+            raise ValueError(f"kernel must be 'xla' or 'pallas', "
+                             f"got {kernel!r}")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -376,9 +421,14 @@ class PagedEngine:
         self.n_pages = n_pages or (1 + max_batch * self.n_logical)
         self.allocator = KVBlockAllocator(self.n_pages, self.page,
                                           prefix_cache=prefix_cache)
+        self.kernel = kernel
+        self.donate_pools = donate_pools
+        self.row_buckets = (scheduler_mod.row_buckets(max_batch)
+                            if row_bucketing else ())
         self.scheduler = Scheduler(
             self.allocator, max_batch=max_batch, chunk=chunk,
-            token_budget=token_budget or (max_batch + chunk))
+            token_budget=token_budget or (max_batch + chunk),
+            row_buckets=self.row_buckets)
         self.max_batch = max_batch
         self.chunk = chunk
         self.stats = PagedServeStats()
@@ -403,8 +453,14 @@ class PagedEngine:
         self.s_pool = jnp.zeros(
             (cfg.n_layers, self.n_pages, cfg.n_kv_heads, cfg.hd),
             jnp.float32)
-        self._decode = jax.jit(_paged_decode_fn(cfg))
-        self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk))
+        # pool buffers are donated into both jits: the step loop rebinds
+        # self.{k,v,s}_pool to the outputs, so XLA updates the pools in
+        # place instead of round-tripping a full pool-sized copy per call
+        donate = (1, 2, 3) if donate_pools else ()
+        self._decode = jax.jit(_paged_decode_fn(cfg, kernel),
+                               donate_argnums=donate)
+        self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk),
+                                donate_argnums=donate)
         self.now = 0
         self._next_rid = 0
         self.requests: dict[int, Request] = {}
@@ -469,6 +525,7 @@ class PagedEngine:
         self.allocator.register_prefix(req.rid, req.prompt,
                                        min(req.computed, req.prompt_len))
         self.stats.prefill_tokens += job.n_tokens
+        self.stats.prefill_calls += 1
         if req.computed == req.prompt_len:
             lg = np.asarray(logits)
             # first pass samples the first token here; a preemption
@@ -480,11 +537,16 @@ class PagedEngine:
                 self.stats.tokens_out += 1
                 self._finish_if_done(req)
 
-    def _run_decode(self, rows: list) -> None:
+    def _run_decode(self, rows: list, bucket: int = 0) -> None:
         r_act = len(rows)
-        token = np.zeros((self.max_batch,), dtype=np.int32)
-        pos = np.zeros((self.max_batch,), dtype=np.int32)
-        bts = np.zeros((self.max_batch, self.n_logical), dtype=np.int32)
+        # ragged batches pad to the scheduler's power-of-two row bucket
+        # (NULL block tables, scratch-page scribbles) instead of always
+        # to max_batch: O(log R_max) distinct decode traces, and the
+        # padded compute shrinks with the actual batch
+        rb = bucket or self.max_batch
+        token = np.zeros((rb,), dtype=np.int32)
+        pos = np.zeros((rb,), dtype=np.int32)
+        bts = np.zeros((rb, self.n_logical), dtype=np.int32)
         for i, req in enumerate(rows):
             token[i] = req.seq[req.computed]
             pos[i] = req.computed
@@ -510,6 +572,7 @@ class PagedEngine:
                 req.last_logits = lg[i].copy()
                 self.stats.tokens_out += 1
                 self._finish_if_done(req)
+        self.stats.decode_rows_padded += rb - r_act
         # NSB accounting over the iteration's unique physical pages
         uniq = np.unique(sel0[:r_act])
         uniq = uniq[uniq != NULL_PAGE]
@@ -533,7 +596,7 @@ class PagedEngine:
         for job in plan.prefill:
             self._run_prefill(job)
         if plan.decode:
-            self._run_decode(plan.decode)
+            self._run_decode(plan.decode, plan.decode_bucket)
             self.stats.steps += 1
         self.stats.preemptions = self.scheduler.n_preemptions
         return plan.n_tokens
@@ -561,6 +624,27 @@ class PagedEngine:
                                "capture_trace=True to record selections")
         return self.recorder.to_trace()
 
+    @staticmethod
+    def _trace_count(jitted) -> int:
+        """Compilation count of a jitted function, via the (private)
+        jax cache-size hook; -1 if a jax upgrade removes it — metrics
+        must degrade, not raise."""
+        try:
+            return int(jitted._cache_size())
+        except AttributeError:
+            return -1
+
+    def n_decode_traces(self) -> int:
+        """Distinct decode-step compilations so far: one per row bucket
+        actually used (bucketing caps this at O(log max_batch); padding
+        every batch to max_batch pins it at 1 but wastes the padded
+        rows' compute)."""
+        return self._trace_count(self._decode)
+
+    def n_prefill_traces(self) -> int:
+        """Distinct prefill-chunk compilations (fixed chunk shape: 1)."""
+        return self._trace_count(self._prefill)
+
     def metrics(self) -> dict:
         done = [r for r in self.requests.values()
                 if r.finished_at >= 0]
@@ -583,4 +667,7 @@ class PagedEngine:
             "prefix_hit_pages": self.allocator.stats.prefix_hits,
             "prefix_evictions": self.allocator.stats.prefix_evictions,
             "cow_copies": self.allocator.stats.cow_copies,
+            "n_decode_traces": self.n_decode_traces(),
+            "n_prefill_traces": self.n_prefill_traces(),
+            "decode_rows_padded": self.stats.decode_rows_padded,
         }

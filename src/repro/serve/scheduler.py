@@ -28,6 +28,14 @@ engine re-prefills the prompt and *replays* the already-generated tokens
 through the decode path, which reproduces the original computation
 exactly (see ``engine.PagedEngine``).
 
+Bucket-aware plans: when constructed with ``row_buckets`` (the engine
+passes ``row_buckets(max_batch)`` when decode-row bucketing is on), the
+plan records the power-of-two row bucket the engine will pad the decode
+batch to (``plan.decode_bucket``) and tops the batch up to that boundary
+with budget-deferred decoding requests — the padded slots are computed
+either way, so they might as well carry real tokens.  Top-up never
+preempts.
+
 Arrivals come from :class:`PoissonArrivals` (open-loop load generator) or
 :class:`TraceArrivals` (replay a recorded workload); both yield
 ``(arrival_tick, prompt_len, max_new_tokens)`` tuples.
@@ -119,10 +127,32 @@ class PrefillJob:
 class IterationPlan:
     decode: list = field(default_factory=list)      # [Request]
     prefill: list = field(default_factory=list)     # [PrefillJob]
+    decode_bucket: int = 0    # padded decode rows (0 = engine default)
 
     @property
     def n_tokens(self) -> int:
         return len(self.decode) + sum(j.n_tokens for j in self.prefill)
+
+
+def row_buckets(max_rows: int) -> tuple[int, ...]:
+    """Power-of-two decode-row buckets up to ``max_rows``: the fixed jit
+    shapes a bucketing engine pads ragged batches to.  O(log R_max)
+    buckets -> O(log R_max) decode traces over any workload."""
+    out = []
+    b = 1
+    while b < max_rows:
+        out.append(b)
+        b <<= 1
+    out.append(max_rows)
+    return tuple(out)
+
+
+def bucket_for(n_rows: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket holding ``n_rows`` (the padded batch shape)."""
+    for b in buckets:
+        if n_rows <= b:
+            return b
+    return buckets[-1]
 
 
 class PoissonArrivals:
@@ -165,12 +195,19 @@ class Scheduler:
 
     def __init__(self, allocator: KVBlockAllocator, max_batch: int = 8,
                  chunk: int = 16, token_budget: int = 32,
-                 max_running: int = 0) -> None:
+                 max_running: int = 0,
+                 row_buckets: tuple[int, ...] = ()) -> None:
         self.allocator = allocator
         self.max_batch = max_batch
         self.chunk = chunk
         self.token_budget = max(token_budget, 1)
         self.max_running = max_running or max_batch
+        # bucket-aware planning: when the engine pads decode batches to
+        # power-of-two buckets, the padded slots cost the same jitted
+        # call whether they carry NULL rows or real requests — so the
+        # plan tops the decode batch up to the bucket boundary with
+        # eligible rows the token budget alone would have deferred
+        self.row_buckets = tuple(row_buckets)
         self.waiting: deque[Request] = deque()
         self.running: list[Request] = []
         self._admission_seq = 0
@@ -289,7 +326,32 @@ class Scheduler:
         # a prefill allocation may have evicted a request planned above
         plan.decode = [r for r in plan.decode if r in self.running]
         plan.prefill = [j for j in plan.prefill if j.req in self.running]
+        if self.row_buckets and plan.decode:
+            self._fill_bucket(plan)
+            plan.decode_bucket = bucket_for(len(plan.decode),
+                                            self.row_buckets)
         return plan
+
+    def _fill_bucket(self, plan: IterationPlan) -> None:
+        """Top the decode batch up to its bucket boundary.
+
+        The engine pads the batch to ``bucket_for(len(decode))`` rows
+        either way, so slots the token budget deferred are free compute:
+        fill them with eligible decoding requests instead of NULL rows.
+        ``plan.n_tokens`` may then exceed ``token_budget`` — by design,
+        those tokens ride in already-paid-for padding.  Top-up never
+        preempts (plain ``ensure``): a free slot is not worth an
+        eviction."""
+        bucket = bucket_for(len(plan.decode), self.row_buckets)
+        planned = {r.rid for r in plan.decode}
+        for req in sorted(self.running, key=lambda r: r.admission_seq):
+            if len(plan.decode) >= bucket:
+                break
+            if req.rid in planned or req.in_prefill:
+                continue
+            if not self.allocator.ensure(req.rid, req.computed + 1):
+                continue
+            plan.decode.append(req)
 
     def finish(self, req: Request, now: float) -> None:
         req.state = RequestState.FINISHED

@@ -5,7 +5,8 @@ import pytest
 
 from repro.serve.kv_allocator import NULL_PAGE, KVBlockAllocator
 from repro.serve.scheduler import (PoissonArrivals, Request, RequestState,
-                                   Scheduler, TraceArrivals)
+                                   Scheduler, TraceArrivals, bucket_for,
+                                   row_buckets)
 
 
 class TestAllocator:
@@ -306,6 +307,82 @@ class TestScheduler:
         assert plan.n_tokens <= 10
 
 
+class TestRowBuckets:
+    def test_bucket_helpers(self):
+        assert row_buckets(8) == (1, 2, 4, 8)
+        assert row_buckets(1) == (1,)
+        assert row_buckets(6) == (1, 2, 4, 6)    # cap is always a bucket
+        bks = row_buckets(8)
+        assert bucket_for(1, bks) == 1
+        assert bucket_for(3, bks) == 4
+        assert bucket_for(8, bks) == 8
+        assert bucket_for(99, bks) == 8          # clamped to the cap
+
+    def test_bucket_count_is_log_of_max_batch(self):
+        import math
+
+        for mb in (1, 2, 4, 8, 16, 64):
+            assert len(row_buckets(mb)) <= math.ceil(math.log2(mb)) + 1
+
+    def test_schedule_fills_bucket_with_deferred_rows(self):
+        """Padded decode slots are free compute: a bucket-aware plan
+        tops the batch up to the bucket boundary with decoding requests
+        the token budget alone would have deferred."""
+        al = KVBlockAllocator(n_pages=33, page_tokens=4)
+        s = Scheduler(al, max_batch=8, chunk=4, token_budget=32,
+                      row_buckets=row_buckets(8))
+        reqs = [_mk(i, 4, 8) for i in range(5)]
+        for r in reqs:
+            s.add(r)
+        for now in range(1, 12):                 # prefill everyone
+            if all(not r.in_prefill for r in reqs):
+                break
+            _drive(s, float(now))
+        s.token_budget = 3                       # now constrain decode
+        plan = s.schedule(99.0)
+        # budget admits 3 decode rows; the bucket boundary is 4, so one
+        # deferred row rides in the padding for free
+        assert len(plan.decode) == 4
+        assert plan.decode_bucket == 4
+        assert plan.n_tokens == 4                # over budget by design
+
+    def test_fill_never_preempts(self):
+        """Topping a bucket up uses plain ensure(): a free slot must
+        never evict another request's pages."""
+        al = KVBlockAllocator(n_pages=7, page_tokens=4)   # 6 allocatable
+        s = Scheduler(al, max_batch=4, chunk=8, token_budget=2,
+                      row_buckets=row_buckets(4))
+        reqs = [_mk(i, 8, 8) for i in range(3)]            # 2 pages each
+        for r in reqs:
+            s.add(r)
+        for now in range(1, 8):
+            if all(not r.in_prefill for r in reqs if
+                   r.state is RequestState.RUNNING):
+                break
+            _drive(s, float(now))
+        pre = s.n_preemptions
+        plan = s.schedule(50.0)
+        # budget schedules 2; filling toward bucket 4 may fail page
+        # allocation for the third — that must defer, not preempt
+        assert s.n_preemptions == pre
+        assert len(plan.decode) <= 4
+
+    def test_no_buckets_means_no_fill_and_zero_bucket(self):
+        al = KVBlockAllocator(n_pages=33, page_tokens=4)
+        s = Scheduler(al, max_batch=8, chunk=4, token_budget=32)
+        reqs = [_mk(i, 4, 8) for i in range(5)]
+        for r in reqs:
+            s.add(r)
+        for now in range(1, 12):
+            if all(not r.in_prefill for r in reqs):
+                break
+            _drive(s, float(now))
+        s.token_budget = 3
+        plan = s.schedule(99.0)
+        assert len(plan.decode) == 3             # budget only
+        assert plan.decode_bucket == 0           # engine pads to max_batch
+
+
 class TestArrivals:
     def test_poisson_deterministic_and_sorted(self):
         a = PoissonArrivals(16, rate=0.5, seed=3)
@@ -522,3 +599,92 @@ class TestPrefixCacheEngine:
         assert eng.allocator.pages_in_use == 0
         assert eng.allocator.pages_cached > 0
         assert eng.allocator.pages_free == eng.allocator.capacity
+
+
+@pytest.mark.slow
+class TestStepLoopFastPath:
+    """The donated + bucketed step loop: no per-call pool copy, a
+    trace-count ceiling of O(log max_batch), and unchanged outputs."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import api
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def _engine(self, cfg, params, **kw):
+        from repro.serve.engine import PagedEngine
+
+        return PagedEngine(cfg, params, max_len=48, max_batch=4, chunk=8,
+                           nsb_pages=32, **kw)
+
+    def test_donation_consumes_pool_buffers(self, setup):
+        """With donate_pools the jitted step consumes the input pool
+        buffer (XLA reuses it for the output) instead of allocating a
+        fresh pool-sized copy; without it the input stays live."""
+        cfg, params = setup
+        eng = self._engine(cfg, params)
+        eng.submit(np.arange(1, 15), max_new_tokens=4)
+        k0, v0, s0 = eng.k_pool, eng.v_pool, eng.s_pool
+        eng.step()
+        assert k0.is_deleted() and v0.is_deleted() and s0.is_deleted()
+
+        base = self._engine(cfg, params, donate_pools=False)
+        base.submit(np.arange(1, 15), max_new_tokens=4)
+        k0 = base.k_pool
+        base.step()
+        assert not k0.is_deleted()    # pre-PR behaviour: copy survives
+
+    def test_donation_keeps_live_pool_buffer_count_flat(self, setup):
+        import jax
+
+        cfg, params = setup
+        eng = self._engine(cfg, params)
+        eng.submit(np.arange(1, 15), max_new_tokens=8)
+        eng.step()
+        eng.step()                     # decode path warm
+
+        def pool_buffers():
+            return sum(1 for a in jax.live_arrays()
+                       if a.shape == eng.k_pool.shape)
+
+        before = pool_buffers()
+        for _ in range(4):
+            eng.step()
+        assert pool_buffers() == before
+
+    def test_bucketing_caps_decode_traces(self, setup):
+        """A full Poisson run through the bucketed engine compiles at
+        most one decode trace per row bucket — O(log max_batch) — while
+        computing strictly fewer padded rows than the pad-to-max
+        baseline."""
+        import math
+
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        arrivals = PoissonArrivals(10, rate=0.7, prompt_len=(6, 16),
+                                   gen_len=(3, 8), seed=5)
+        work = [(t, rng.integers(1, cfg.vocab, size=p), g)
+                for t, p, g in arrivals]
+
+        eng = self._engine(cfg, params)
+        eng.run([(t, p.copy(), g) for t, p, g in work])
+        m = eng.metrics()
+        assert m["n_decode_traces"] <= math.ceil(math.log2(4)) + 1
+        assert m["n_prefill_traces"] == 1
+
+        base = self._engine(cfg, params, row_bucketing=False)
+        base.run([(t, p.copy(), g) for t, p, g in work])
+        assert base.metrics()["n_decode_traces"] == 1    # always max_batch
+        assert (m["decode_rows_padded"]
+                < base.metrics()["decode_rows_padded"])
+        # free-path changes must not change what anyone generated
+        for rid in base.requests:
+            a, b = base.requests[rid], eng.requests[rid]
+            assert a.out_tokens == b.out_tokens
+            assert np.array_equal(a.last_logits, b.last_logits)
