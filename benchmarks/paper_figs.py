@@ -419,6 +419,15 @@ def paged_kernel_bench():
     return _pk()
 
 
+def tp_serve_bench():
+    """Tensor-parallel paged serving: tokens/s at tp=1/2/4 over the
+    KV-head-sharded pool, bitwise cross-tp parity + pool donation
+    asserted in-run (defined in benchmarks/serve_bench.py; lazy import
+    as above; sharded levels need forced host devices)."""
+    from .serve_bench import tp_serve_bench as _tp
+    return _tp()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -433,4 +442,5 @@ ALL = {
     "serve_bench": serve_bench,        # continuous batching vs lockstep
     "prefix_bench": prefix_bench,      # COW prefix cache on/off
     "paged_kernel_bench": paged_kernel_bench,  # donated+bucketed decode
+    "tp_serve_bench": tp_serve_bench,  # KV-head-sharded TP serving
 }

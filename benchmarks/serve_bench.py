@@ -28,8 +28,17 @@ prefix caching: prefill-token savings, TTFT/throughput deltas, the
 cached-page hit rate, and the captured-trace NVR replay on genuinely
 shared physical ids.
 
+A third, ``tp_serve_bench``, runs the same Poisson load through the
+tensor-parallel engine (KV-head-sharded pools + QKV weights over a
+("model",) mesh) at tp=1 vs tp=2/4: tokens/s per tp level, bitwise
+cross-tp parity of every request's tokens and logits asserted in-run,
+pool donation asserted under sharding, and per-shard NSB hit rates.
+The sharded levels need forced host devices on CPU.
+
   PYTHONPATH=src python -m benchmarks.serve_bench
   PYTHONPATH=src python -m benchmarks.run serve_bench prefix_bench
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.run tp_serve_bench
 """
 
 from __future__ import annotations
@@ -101,6 +110,7 @@ def _run_single_batch(cfg, params, workload, batch_size: int = 8):
             merged.events.extend(eng.recorder.events)
             merged.rids.extend(eng.recorder.rids)
             merged.steps.extend(eng.recorder.steps)
+            merged.shards.extend(eng.recorder.shards)
             merged.n_rows = max(merged.n_rows, eng.recorder.n_rows)
         # latency model: start when drained AND every member has arrived
         start = max(tick, max(t for t, _, _ in group))
@@ -132,6 +142,10 @@ def serve_bench():
     # finished-only, same filter metrics() applies — keep one definition
     cb_lat = [r.latency() for r in eng.requests.values()
               if r.finished_at >= 0]
+    # nearest-rank percentiles are actual order statistics of the sample
+    for q in (0.50, 0.99):
+        assert percentile(cb_lat, q) in cb_lat, \
+            f"p{int(q * 100)} is not an order statistic"
 
     sb_stream, sb_lat, sb_hit, sb_wall, sb_tokens = _run_single_batch(
         cfg, params, workload)
@@ -284,9 +298,127 @@ def prefix_bench():
     return rows, headline
 
 
+def _run_tp(cfg, params, workload, mesh=None, assert_donation=False):
+    """One full Poisson run through the engine at a given sharding."""
+    import jax
+
+    from repro.serve.engine import PagedEngine
+
+    eng = PagedEngine(cfg, params, max_len=48, max_batch=8, chunk=8,
+                      nsb_pages=32, capture_trace=True, mesh=mesh)
+    if assert_donation:
+        # pool donation must survive sharding: the jitted step consumes
+        # the input pool buffers instead of copying the sharded pools
+        eng.submit(np.arange(1, 15), max_new_tokens=2)
+        k0, v0, s0 = eng.k_pool, eng.v_pool, eng.s_pool
+        eng.step()
+        assert k0.is_deleted() and v0.is_deleted() and s0.is_deleted(), \
+            f"pool buffers not donated at tp={eng.tp}"
+        del eng
+        jax.clear_caches()
+        eng = PagedEngine(cfg, params, max_len=48, max_batch=8, chunk=8,
+                          nsb_pages=32, capture_trace=True, mesh=mesh)
+    t0 = time.perf_counter()
+    eng.run([(t, p.copy(), g) for t, p, g in workload])
+    wall = time.perf_counter() - t0
+    return eng, wall
+
+
+def tp_serve_bench():
+    """Registered in benchmarks.run as ``tp_serve_bench``: the same
+    Poisson serve workload through the paged engine at tp=1 vs tp=2
+    (and tp=4 on a 4-KV-head config variant), with per-request token
+    streams and logits asserted **bitwise-identical** across tp in the
+    same run, pool donation asserted under sharding, and per-shard NSB
+    hit rates reported.
+
+    Needs forced host devices for the sharded runs
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``); tp levels
+    the device count cannot host are reported as skipped, never
+    silently dropped.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.nvr.capture import nsb_shard_rollup
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import api
+
+    n_dev = jax.device_count()
+    n_req = max(12, int(24 * SCALE))
+    rows = []
+    headline = {"n_requests": float(n_req), "devices": float(n_dev)}
+
+    def bitwise(a_eng, b_eng):
+        for rid in a_eng.requests:
+            a, b = a_eng.requests[rid], b_eng.requests[rid]
+            assert a.out_tokens == b.out_tokens, f"rid {rid} tokens"
+            assert np.array_equal(a.last_logits, b.last_logits), \
+                f"rid {rid} logits diverged across tp"
+
+    # tp in {1, 2} on the stock reduced config (2 KV heads); tp=4 needs
+    # 4 KV heads, so it runs on an MHA-style variant vs its own tp=1
+    plans = [("qwen2-1.5b", None, (1, 2)),
+             ("qwen2-1.5b", {"n_kv_heads": 4}, (1, 4))]
+    for arch, patch, tps in plans:
+        cfg = get_config(arch).reduced()
+        label = arch
+        if patch:
+            cfg = dataclasses.replace(cfg, **patch)
+            label = f"{arch}-kv{cfg.n_kv_heads}"
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        workload = _workload(cfg, n_req)
+        baseline = None
+        for tp in tps:
+            if tp > n_dev:
+                print(f"[tp_serve_bench] skip {label} tp={tp}: only "
+                      f"{n_dev} device(s) (set XLA_FLAGS=--xla_force_"
+                      "host_platform_device_count=4)")
+                headline[f"tok_per_s_{label}_tp{tp}"] = float("nan")
+                continue
+            mesh = make_serve_mesh(tp) if tp > 1 else None
+            eng, wall = _run_tp(cfg, params, workload, mesh=mesh,
+                                assert_donation=tp > 1)
+            m = eng.metrics()
+            if baseline is None:
+                baseline = eng
+            else:
+                bitwise(baseline, eng)
+            tok_s = m["tokens_out"] / wall
+            headline[f"tok_per_s_{label}_tp{tp}"] = tok_s
+            shard_rates = m.get("nsb_shard_hit_rates",
+                                [m["nsb_hot_hit_rate"]])
+            if tp > 1:
+                # offline twin: replay the shard-tagged captured stream
+                # through per-shard NSB models (per-event granularity,
+                # vs the engine's per-iteration unique-page accounting)
+                roll = nsb_shard_rollup(eng.recorder, 32, tp)
+                headline[f"nsb_replay_rollup_{label}_tp{tp}"] = \
+                    roll["hit_rate"]
+            rows.append((label, tp, f"{tok_s:.1f}",
+                         f"{m['p50_latency']:.0f}",
+                         f"{m['nsb_hot_hit_rate']:.3f}",
+                         ";".join(f"{r:.3f}" for r in shard_rates),
+                         f"{m['kv_pool_mib_per_shard']:.3f}",
+                         m["preemptions"]))
+    headline["paper"] = ("NVR as a per-NPU mechanism surviving "
+                         "scale-out: KV-head-sharded pools, per-shard "
+                         "NSBs, bitwise-identical decode across tp")
+    from repro.core.nvr.engine.sweep import write_artifacts
+    write_artifacts(
+        "tp_serve_bench",
+        "config,tp,tokens_per_s,p50_latency_iters,nsb_hit_rate,"
+        "nsb_shard_hit_rates,kv_pool_mib_per_shard,preemptions",
+        rows, RESULTS, scale=SCALE)
+    return rows, headline
+
+
 def main() -> None:
     for name, fn in (("serve_bench", serve_bench),
-                     ("prefix_bench", prefix_bench)):
+                     ("prefix_bench", prefix_bench),
+                     ("tp_serve_bench", tp_serve_bench)):
         rows, headline = fn()
         print(f"{name}: {len(rows)} requests")
         for k, v in headline.items():

@@ -43,9 +43,13 @@ class PageStream:
 
     Multi-tenant traffic is tagged: ``rids[i]`` / ``steps[i]`` carry the
     request id and scheduler iteration that produced ``events[i]`` (-1
-    when untagged, e.g. single-batch capture).  Tags are metadata only —
-    ``to_trace`` lowers events in recorded order, so a continuous-batching
-    engine's interleaving is exactly what the simulator replays.
+    when untagged, e.g. single-batch capture).  Tensor-parallel traffic
+    adds ``shards[i]``: the model shard whose KV heads produced the
+    selection (-1 when serving is single-shard) — each shard owns its own
+    NSB, so per-shard streams replay through per-shard hot-set models
+    (:func:`nsb_shard_rollup`).  Tags are metadata only — ``to_trace``
+    lowers events in recorded order, so a continuous-batching engine's
+    interleaving is exactly what the simulator replays.
     """
 
     name: str
@@ -55,16 +59,20 @@ class PageStream:
     events: list = field(default_factory=list)
     rids: list = field(default_factory=list)
     steps: list = field(default_factory=list)
+    shards: list = field(default_factory=list)
 
-    def record(self, idx, *, rid: int = -1, step: int = -1) -> None:
+    def record(self, idx, *, rid: int = -1, step: int = -1,
+               shard: int = -1) -> None:
         """Record one selection event (any int array-like of row ids)."""
         arr = np.asarray(idx, dtype=np.int64).reshape(-1)
         if arr.size:
             self.events.append(arr)
             self.rids.append(int(rid))
             self.steps.append(int(step))
+            self.shards.append(int(shard))
 
-    def record_batched(self, idx, *, rid: int = -1, step: int = -1) -> None:
+    def record_batched(self, idx, *, rid: int = -1, step: int = -1,
+                       shard: int = -1) -> None:
         """Record ``idx[..., K]`` as one event per leading slot — e.g. a
         ``[B, KV, K]`` TopK selection becomes ``B*KV`` events.  Empty
         rows (K == 0) are skipped, matching :meth:`record` — zero-length
@@ -76,6 +84,7 @@ class PageStream:
             self.events.append(row.copy())
             self.rids.append(int(rid))
             self.steps.append(int(step))
+            self.shards.append(int(shard))
 
     @property
     def n_events(self) -> int:
@@ -100,14 +109,37 @@ class PageStream:
         return [(s, e) for e, r, s in zip(self.events, self.rids,
                                           self.steps) if r == rid]
 
-    def subset(self, rid: int) -> "PageStream":
-        """A single request's traffic as its own stream (same table)."""
-        sub = PageStream(name=f"{self.name}/r{rid}", n_rows=self.n_rows,
+    def _filtered(self, suffix: str, pred) -> "PageStream":
+        """A new stream over the same table holding the events where
+        ``pred(rid, shard)`` is true, all tags preserved."""
+        sub = PageStream(name=f"{self.name}/{suffix}", n_rows=self.n_rows,
                          row_bytes=self.row_bytes,
                          compute_per_row=self.compute_per_row)
-        for step, ev in self.events_for(rid):
-            sub.record(ev, rid=rid, step=step)
+        for ev, r, st, sh in zip(self.events, self.rids, self.steps,
+                                 self.shards):
+            if pred(r, sh):
+                sub.record(ev, rid=r, step=st, shard=sh)
         return sub
+
+    def subset(self, rid: int) -> "PageStream":
+        """A single request's traffic as its own stream (same table)."""
+        return self._filtered(f"r{rid}", lambda r, sh: r == rid)
+
+    # -- tensor-parallel views -----------------------------------------------
+
+    def shard_ids(self) -> list:
+        """Distinct shard tags in first-appearance order (without -1)."""
+        seen: dict = {}
+        for s in self.shards:
+            if s >= 0 and s not in seen:
+                seen[s] = None
+        return list(seen)
+
+    def subset_shard(self, shard: int) -> "PageStream":
+        """One model shard's traffic as its own stream: the page
+        selections its KV heads produced, in recorded order — the
+        traffic that shard's private NSB sees."""
+        return self._filtered(f"shard{shard}", lambda r, sh: sh == shard)
 
     def interleave_spans(self) -> dict:
         """Per-request (first, last) positions in the recorded order —
@@ -222,3 +254,72 @@ class PageCache:
     @property
     def stats(self):
         return self.cache.stats
+
+    @property
+    def hit_rate(self) -> float:
+        s = self.cache.stats
+        tot = s.hits + s.misses
+        return s.hits / tot if tot else float("nan")
+
+
+class ShardedPageCache:
+    """Per-shard NSB hot-set models for tensor-parallel serving.
+
+    Under TP the paper's near-storage buffer is a *per-NPU* structure:
+    each model shard holds its slice of the KV pool and its own NSB, and
+    only sees the page selections its local KV heads produce.  This
+    wrapper keeps one :class:`PageCache` per shard, keyed by the shared
+    *global* physical page ids (the page-id space is never sharded), so
+    per-shard hit rates and the cross-shard roll-up stay directly
+    comparable with the single-shard accounting.
+    """
+
+    def __init__(self, n_shards: int, capacity_pages: int) -> None:
+        if n_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {n_shards}")
+        self.caches = [PageCache(capacity_pages) for _ in range(n_shards)]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.caches)
+
+    def touch(self, page: int, shard: int) -> bool:
+        """Access one page id on one shard's NSB; True on a hit."""
+        return self.caches[shard].touch(page)
+
+    def hit_rates(self) -> list:
+        """Per-shard NSB hit rates, indexed by shard."""
+        return [c.hit_rate for c in self.caches]
+
+    def rollup(self) -> dict:
+        """Aggregate view across shards: summed hits/misses plus the
+        per-shard rates (the serve ``metrics()`` roll-up)."""
+        hits = sum(c.stats.hits for c in self.caches)
+        misses = sum(c.stats.misses for c in self.caches)
+        tot = hits + misses
+        return {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / tot if tot else float("nan"),
+            "per_shard": self.hit_rates(),
+        }
+
+
+def nsb_shard_rollup(stream: PageStream, nsb_pages: int,
+                     n_shards: int | None = None) -> dict:
+    """Replay a shard-tagged stream through per-shard NSB models.
+
+    Each recorded event is routed to its shard's :class:`PageCache`
+    (untagged events, ``shard == -1``, route to shard 0 — the
+    single-shard case), touching each distinct page id in the event
+    once.  Returns the :meth:`ShardedPageCache.rollup` dict: what the
+    NSB hit rate *would have been* per shard for the captured traffic —
+    the offline twin of the engine's live per-shard accounting.
+    """
+    if n_shards is None:
+        n_shards = max([s for s in stream.shards if s >= 0], default=0) + 1
+    spc = ShardedPageCache(n_shards, nsb_pages)
+    for ev, sh in zip(stream.events, stream.shards):
+        for p in dict.fromkeys(int(x) for x in ev):
+            spc.touch(p, max(sh, 0))
+    return spc.rollup()

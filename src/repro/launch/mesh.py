@@ -17,6 +17,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serve_mesh(tp: int = 1):
+    """1-axis ``("model",)`` mesh for tensor-parallel paged serving: the
+    KV pools and QKV weights shard ``tp`` ways along the KV-head axis
+    (``sharding.serve_pool_specs`` / ``serve_param_specs``).
+
+    On CPU, force host devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    n = jax.device_count()
+    if tp > n:
+        raise ValueError(
+            f"serve mesh wants tp={tp} but only {n} device(s) exist; on "
+            "CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{tp} before jax initialises")
+    return jax.make_mesh((tp,), ("model",))
+
+
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over however many (host) devices exist — used by tests
     and CPU examples."""

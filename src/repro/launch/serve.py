@@ -17,6 +17,15 @@ compare against the uncached run):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --continuous --requests 16 --shared-prefix 4 --capture
+
+Tensor-parallel serving — the physical KV pools and QKV weights shard
+across a ("model",) mesh along the KV-head axis (1/tp pool bytes per
+shard, per-shard NSBs, logits bitwise-identical to --tp 1).  On CPU,
+force host devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --continuous --tp 2 --requests 16
 """
 
 from __future__ import annotations
@@ -77,19 +86,30 @@ def _run_continuous(cfg, params, args):
     # prompt + suffix) may exceed --prompt-len
     longest = max(len(p) + g for _, p, g in workload)
     max_len = -(-longest // cfg.kv_page) * cfg.kv_page
+    mesh = None
+    if args.tp > 1:
+        from .mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.tp)
     eng = PagedEngine(cfg, params, max_len=max_len, n_pages=args.pages,
                       max_batch=args.max_batch, chunk=args.chunk,
                       nsb_pages=args.nsb_pages, capture_trace=args.capture,
                       prefix_cache=not args.no_prefix_cache,
                       kernel=args.kernel,
                       donate_pools=not args.no_donate,
-                      row_bucketing=not args.no_buckets)
+                      row_bucketing=not args.no_buckets,
+                      mesh=mesh)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
           f"{m['iterations']} iterations ({m['tokens_out']} tokens, "
           f"{m['preemptions']} preemptions, peak "
           f"{m['pages_peak_in_use']}/{eng.allocator.capacity} pages)")
+    if eng.tp > 1:
+        rates = ", ".join(f"{r:.3f}" for r in m["nsb_shard_hit_rates"])
+        print(f"[serve-cb] tp={eng.tp}: "
+              f"{m['kv_pool_mib_per_shard']:.2f} MiB KV pool per shard, "
+              f"per-shard NSB hit rates [{rates}] "
+              f"(roll-up {m['nsb_shard_rollup_hit_rate']:.3f})")
     print(f"[serve-cb] step loop: {m['n_decode_traces']} decode traces "
           f"({eng.kernel} kernel), {m['decode_rows_padded']} padded "
           f"decode rows")
@@ -148,11 +168,19 @@ def main(argv=None):
                    help="disable pool-buffer donation (pre-PR copies)")
     p.add_argument("--no-buckets", action="store_true",
                    help="pad every decode batch to --max-batch")
+    p.add_argument("--tp", type=int, default=1,
+                   help="tensor-parallel shards: KV pools + QKV weights "
+                        "shard along the KV-head axis over a (model,) "
+                        "mesh (continuous mode; head counts must divide; "
+                        "on CPU force devices with XLA_FLAGS=--xla_force"
+                        "_host_platform_device_count=N)")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+    if args.tp > 1 and not args.continuous:
+        p.error("--tp needs --continuous (only the paged engine shards)")
 
     cfg = get_config(args.arch)
     if args.reduced:

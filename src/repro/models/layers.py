@@ -169,8 +169,15 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.astype(q.dtype)
 
 
-def gqa_project(x: jax.Array, p: Params, cfg: Any) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """QKV projection with optional bias; returns [B,S,H,D], [B,S,KV,D] x2."""
+def gqa_project(x: jax.Array, p: Params, cfg: Any,
+                n_heads: int | None = None,
+                n_kv: int | None = None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """QKV projection with optional bias; returns [B,S,H,D], [B,S,KV,D] x2.
+
+    ``n_heads`` / ``n_kv`` override the cfg head counts for
+    tensor-parallel shards whose wq/wk/wv carry only a head slice (the
+    serve engine's shard_map bodies); the math is unchanged — only the
+    final reshape sees the local counts."""
     b, s, _ = x.shape
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
@@ -179,9 +186,11 @@ def gqa_project(x: jax.Array, p: Params, cfg: Any) -> tuple[jax.Array, jax.Array
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
         v = v + p["bv"].astype(x.dtype)
-    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
-    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
-    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    nh = cfg.n_heads if n_heads is None else n_heads
+    nk = cfg.n_kv_heads if n_kv is None else n_kv
+    q = q.reshape(b, s, nh, cfg.hd)
+    k = k.reshape(b, s, nk, cfg.hd)
+    v = v.reshape(b, s, nk, cfg.hd)
     return q, k, v
 
 

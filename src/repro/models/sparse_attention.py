@@ -346,13 +346,25 @@ def select_pages_blocktable(q: jax.Array, kpage_pool_li: jax.Array,
 def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
                        v_pool_li: jax.Array, idx: jax.Array,
                        phys: jax.Array, pos: jax.Array,
-                       page: int) -> jax.Array:
+                       page: int, tp_axis: str | None = None) -> jax.Array:
     """Attend q [R,KV,G,D] to physically-gathered pages.
 
     k_pool_li / v_pool_li [P,page,KV,D] (one layer of the pool); idx
     [R,KV,K] logical page ids (for position masking), phys [R,KV,K]
     physical page ids (for the gather); pos [R] per-request frontier.
     Fully-masked rows (padded batch slots) produce zeros, not NaNs.
+
+    ``tp_axis`` (inside ``shard_map`` only): the KV-head axis is sharded
+    — q/idx/phys and the pools carry this shard's head slice.  The page
+    *gather* runs locally against the local pool slice (the
+    memory-local NVR operation), then the small gathered TopK tiles —
+    not the pools — are all-gathered and the attention math runs at the
+    full-KV shape, identically replicated on every shard.  That split
+    is what keeps tp>1 *bitwise* equal to tp=1: XLA's fused
+    scores/softmax lowering is shape- and head-position-dependent at
+    ulp level, so per-head math must run at the same shapes/positions
+    as the unsharded oracle.  Returns the full-head [R,KV_total,G,D]
+    when ``tp_axis`` is given.
     """
     kv = k_pool_li.shape[2]
     hi = jnp.arange(kv)[None, :, None]
@@ -360,6 +372,9 @@ def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
     # picking each KV head's own selected pages: [R,KV,K,page,D]
     kg = kv_dequant_f32(k_pool_li[phys, :, hi])
     vg = kv_dequant_f32(v_pool_li[phys, :, hi])
+    if tp_axis is not None:
+        q, idx, kg, vg = jax.lax.all_gather(
+            (q, idx, kg, vg), tp_axis, axis=1, tiled=True)
     d = q.shape[-1]
     scores = jnp.einsum("bkgd,bkptd->bkgpt", q.astype(jnp.float32),
                         kg) / (d ** 0.5)

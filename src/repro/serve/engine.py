@@ -32,6 +32,13 @@ already-generated tokens *replay* through the decode path (teacher
 forcing), so the same jitted functions see the same inputs and the
 request's logits are reproduced exactly.
 
+With ``mesh=`` the engine is tensor-parallel: pools and QKV weights
+shard along the KV-head axis over a ``("model",)`` mesh while the page
+id space, block tables and scheduler state stay global, and every
+cross-shard combine is a concatenation — logits remain bitwise-identical
+to the unsharded engine (see ``_paged_decode_fn`` and the sharded-serve
+section of ARCHITECTURE.md).
+
 Per-step page traffic is scored against the NSB model, and with
 ``capture_trace=True`` each decode step's *layer-0* TopK selection (the
 same layer-0 traffic proxy the single-batch engine uses, but computed
@@ -45,13 +52,17 @@ is CPU-only: reported rates are traffic counts, not wall-clock.
 
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from .. import sharding
 from ..configs.base import ArchConfig
 from ..core.nvr import capture
 from ..models import api, sparse_attention, transformer
@@ -62,12 +73,15 @@ from .scheduler import PrefillJob, Request, Scheduler
 
 
 def percentile(xs, q: float) -> float:
-    """Nearest-rank percentile (the one definition engine metrics and
-    serve_bench share)."""
+    """Nearest-rank (ceil-rank) percentile: the ``ceil(q*n)``-th order
+    statistic, 1-indexed — numpy's ``inverted_cdf`` method, and the one
+    definition engine metrics and serve_bench share.  (The earlier
+    ``round(q*(n-1))`` form banker's-rounded ``.5`` ranks upward: p50 of
+    4 samples returned the 3rd order statistic instead of the 2nd.)"""
     xs = sorted(xs)
     if not xs:
         return float("nan")
-    return float(xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))])
+    return float(xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))])
 
 
 @dataclass
@@ -78,6 +92,7 @@ class ServeStats:
     nsb_hits: int = 0
     nsb_misses: int = 0
     tokens_out: int = 0
+    row_bytes: int = 0              # K+V bytes fetched per demanded page
 
     @property
     def hot_hit_rate(self) -> float:
@@ -85,9 +100,24 @@ class ServeStats:
         return self.nsb_hits / tot if tot else float("nan")
 
     @property
+    def demand_bytes(self) -> int:
+        """Total off-chip demand: every touched page is one K+V page
+        fetch of ``row_bytes`` (the same per-row size the capture
+        recorder charges, so serve metrics and simulator replay count
+        the same bytes)."""
+        return (self.nsb_hits + self.nsb_misses) * self.row_bytes
+
+    @property
     def offchip_reduction(self) -> float:
-        """Fetch reduction from the NSB hot-set (1 = everything reused)."""
-        return self.hot_hit_rate
+        """Fetch-bytes reduction from the NSB hot-set: bytes *not*
+        fetched (hot-set hits x per-page fetch bytes) over total demand
+        bytes — the bytes-over-bytes definition the NVR simulator's
+        ``demand_miss_reduction`` uses, so the two metrics compare like
+        with like.  NaN until the engine sets ``row_bytes`` and traffic
+        has been scored."""
+        tot = self.demand_bytes
+        return (self.nsb_hits * self.row_bytes) / tot if tot \
+            else float("nan")
 
 
 class Engine:
@@ -101,7 +131,8 @@ class Engine:
         self.params = params
         self.max_len = max_len
         self.sparse = sparse and cfg.sparse_kv
-        self.stats = ServeStats()
+        self.stats = ServeStats(
+            row_bytes=2 * cfg.kv_page * cfg.hd * kv_dtype_bytes)
         # NSB hot-set accounting on the shared simulator cache model
         self.hot = capture.PageCache(nsb_pages)
         self._seen_pages: set[int] = set()
@@ -210,8 +241,9 @@ class PagedServeStats(ServeStats):
     prefill_calls: int = 0          # executed prefill-chunk jit calls
 
 
-def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla"):
-    """Build the jitted ragged decode step over the physical page pools.
+def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
+                     tp_axis: str | None = None):
+    """Build the ragged decode step over the physical page pools.
 
     One call advances R requests by one token each: per-request positions
     (no lockstep), KV written through the block table into physical
@@ -224,9 +256,22 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla"):
     ``"pallas"`` is the fused ``kernels.paged_decode_attn`` runahead
     kernel on the same pool layout (scalar-prefetched page ids,
     double-buffered indirect DMAs; interpret mode off-TPU).
+
+    With ``tp > 1`` this is the *per-shard* body run under ``shard_map``
+    (see :func:`_shard_serve_fn`): params carry this shard's head slice
+    of the QKV projections, pools its KV-head slice, and the per-head
+    attention outputs are all-gathered (``tp_axis``) before the
+    replicated output projection.  Every cross-shard combine is a
+    concatenation of independent per-head results — never an arithmetic
+    reduction — which is what keeps tp>1 logits bitwise-identical to
+    tp=1.  Block tables, frontiers and the returned TopK ids stay in the
+    one global physical page-id space.
     """
     page = cfg.kv_page
     dt = jnp.dtype(cfg.param_dtype)
+    kv_l = cfg.n_kv_heads // tp              # KV heads on this shard
+    g = cfg.n_heads // cfg.n_kv_heads        # GQA groups stay whole
+    h_l = kv_l * g
 
     def fn(params, k_pool, v_pool, s_pool, token, pos, bt):
         r = token.shape[0]
@@ -241,13 +286,12 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla"):
         phys_w = jnp.take_along_axis(bt, lp_w[:, None], axis=1)[:, 0]
         n_valid = lp_w + 1
         lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
-        g = cfg.n_heads // cfg.n_kv_heads
 
         def body(carry, lp_li):
             xc, kp_, vp_, sp_ = carry
             lp, li = lp_li
             h = mlayers.rms_norm(xc, lp["ln1"], cfg.norm_eps)
-            q, k_new, v_new = mlayers.gqa_project(h, lp, cfg)
+            q, k_new, v_new = mlayers.gqa_project(h, lp, cfg, h_l, kv_l)
             q = mlayers.apply_rope(q, pos_arr, cfg.rope_theta)
             k_new = mlayers.apply_rope(k_new, pos_arr, cfg.rope_theta)
             kq = sparse_attention.kv_quant(k_new[:, 0], kp_.dtype)
@@ -257,16 +301,29 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla"):
             summ = sparse_attention.page_summary_from_pool(
                 kp_[li], phys_w, off + 1)
             sp_ = sp_.at[li, phys_w].set(summ)
-            qh = q.reshape(r, cfg.n_kv_heads, g, cfg.hd)
+            qh = q.reshape(r, kv_l, g, cfg.hd)
             idx, phys = sparse_attention.select_pages_blocktable(
                 qh, sp_[li], bt, n_valid, k_sel)
             if kernel == "pallas":
+                # the fused runahead kernel streams its shard's pages
+                # end to end; per-head outputs concat across shards
+                # (tolerance-level parity, as on a single shard)
                 o = sparse_attention.attend_pages_paged_kernel(
                     qh, kp_[li], vp_[li], idx, phys, pos, page)
+                o = o.reshape(r, 1, h_l, cfg.hd)
+                if tp_axis is not None:
+                    o = jax.lax.all_gather(o, tp_axis, axis=2,
+                                           tiled=True)
             else:
+                # XLA oracle: local pool gather, then the small TopK
+                # tiles all-gather and the softmax math replays at the
+                # full-KV shape — bitwise equal to tp=1 (see
+                # attend_pages_paged)
                 o = sparse_attention.attend_pages_paged(
-                    qh, kp_[li], vp_[li], idx, phys, pos, page)
-            o = o.reshape(r, 1, cfg.n_heads, cfg.hd)
+                    qh, kp_[li], vp_[li], idx, phys, pos, page,
+                    tp_axis=tp_axis)
+                o = o.reshape(r, 1, cfg.n_heads if tp_axis is not None
+                              else h_l, cfg.hd)
             xc = xc + mlayers.attn_out(o, lp, cfg.d_model)
             h2 = mlayers.rms_norm(xc, lp["ln2"], cfg.norm_eps)
             xc = xc + transformer._ffn(h2, lp, cfg)
@@ -281,8 +338,9 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla"):
     return fn
 
 
-def _paged_prefill_fn(cfg: ArchConfig, chunk: int):
-    """Build the jitted chunked-prefill step for one request.
+def _paged_prefill_fn(cfg: ArchConfig, chunk: int, tp: int = 1,
+                      tp_axis: str | None = None):
+    """Build the chunked-prefill step for one request.
 
     Processes ``t_valid <= chunk`` prompt tokens starting at absolute
     position ``start``: dense causal attention over the request's paged
@@ -290,10 +348,19 @@ def _paged_prefill_fn(cfg: ArchConfig, chunk: int):
     pool, page summaries recomputed through the same
     ``page_summary_from_pool`` the decode path uses.  Padded positions
     write to scratch page 0.
+
+    ``tp``/``tp_axis`` follow :func:`_paged_decode_fn`: with tp > 1 this
+    is the per-shard body — projection and pool writes run on local KV
+    heads, then the per-request *context view* (block-table-gathered
+    from the sharded pools) all-gathers and the dense attention replays
+    at the full-head shape identically on every shard, the same
+    bitwise mechanism as the decode path.
     """
     page = cfg.kv_page
     dt = jnp.dtype(cfg.param_dtype)
     ntp = chunk // page + 2           # touched-page bound per chunk
+    kv_l = cfg.n_kv_heads // tp
+    h_l = (cfg.n_heads // cfg.n_kv_heads) * kv_l
 
     def fn(params, k_pool, v_pool, s_pool, tokens, start, t_valid, bt):
         nl = bt.shape[0]
@@ -317,7 +384,7 @@ def _paged_prefill_fn(cfg: ArchConfig, chunk: int):
             xc, kp_, vp_, sp_ = carry
             lp, li = lp_li
             h = mlayers.rms_norm(xc, lp["ln1"], cfg.norm_eps)
-            q, k_new, v_new = mlayers.gqa_project(h, lp, cfg)
+            q, k_new, v_new = mlayers.gqa_project(h, lp, cfg, h_l, kv_l)
             q = mlayers.apply_rope(q, pos[None, :], cfg.rope_theta)
             k_new = mlayers.apply_rope(k_new, pos[None, :], cfg.rope_theta)
             kq = sparse_attention.kv_quant(k_new[0], kp_.dtype)
@@ -330,9 +397,17 @@ def _paged_prefill_fn(cfg: ArchConfig, chunk: int):
             # dense causal attention over the paged context: the block
             # table linearises this request's pages back into logical
             # order, so positions align with q_offset=start
-            kv_h, hd = cfg.n_kv_heads, cfg.hd
-            kctx = kp_[li, bt].reshape(1, nl * page, kv_h, hd)
-            vctx = vp_[li, bt].reshape(1, nl * page, kv_h, hd)
+            kctx = kp_[li, bt].reshape(1, nl * page, kv_l, cfg.hd)
+            vctx = vp_[li, bt].reshape(1, nl * page, kv_l, cfg.hd)
+            if tp_axis is not None:
+                # same bitwise mechanism as decode: the context view is
+                # gathered from the sharded pools (pool *storage* stays
+                # 1/tp) and the attention math replays at the full-head
+                # shape identically on every shard — per-head softmax
+                # lowering is shape-dependent at ulp level, so local-
+                # shape attention would drift from the tp=1 oracle
+                q, kctx, vctx = jax.lax.all_gather(
+                    (q, kctx, vctx), tp_axis, axis=2, tiled=True)
             o = mlayers.chunked_attention(
                 q, kctx, vctx, causal=True, q_offset=start,
                 chunk=min(1024, nl * page),
@@ -351,6 +426,45 @@ def _paged_prefill_fn(cfg: ArchConfig, chunk: int):
         return logits, k2, v2, s2
 
     return fn
+
+
+def _norm_spec(spec: P) -> P:
+    """Strip trailing Nones: jitted-call cache keys compare PartitionSpecs
+    *literally* (on jax 0.4.3x ``P(a, None) != P(a)``), and shard_map
+    output shardings come back trailing-None-normalised — pools must be
+    device_put with the same normal form or the second call retraces."""
+    dims = list(spec)
+    while dims and dims[-1] is None:
+        dims.pop()
+    return P(*dims)
+
+
+def _shard_serve_fn(fn, mesh, param_specs, n_rep_args: int,
+                    sel_out: bool = False,
+                    axis: str = sharding.SERVE_TP_AXIS):
+    """Wrap a per-shard decode/prefill body in ``shard_map`` over the
+    KV-head axis.
+
+    In: params per ``sharding.serve_param_specs`` (QKV head-sharded,
+    rest replicated), k/v/s pools sharded on their KV-head dim, and
+    ``n_rep_args`` replicated host args (tokens, positions, block
+    tables).  Out: logits replicated (each shard computes the identical
+    post-gather value — no reduction ever crosses shards), pools sharded
+    as they came in (donation-compatible), and for decode the stacked
+    TopK physical ids sharded on their KV-head dim — ``np.asarray`` on
+    the host reassembles the global ``[L,R,KV,K]`` selection, so the
+    allocator/NSB/capture layers keep seeing one physical page-id space.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    kv_spec, s_spec = sharding.serve_pool_specs(axis)
+    in_specs = (param_specs, kv_spec, kv_spec, s_spec) \
+        + (P(),) * n_rep_args
+    out_specs = (P(), kv_spec, kv_spec, s_spec)
+    if sel_out:
+        out_specs = out_specs + (P(None, None, axis, None),)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 class PagedEngine:
@@ -388,6 +502,18 @@ class PagedEngine:
       trace count stays O(log max_batch) (``metrics()["n_decode_traces"]``),
       and the scheduler tops buckets up with budget-deferred rows
       (free-slot decode).
+    * ``mesh`` — tensor parallelism over a 1-axis ``("model",)`` mesh
+      (``launch.mesh.make_serve_mesh``): the physical k/v/s pools and
+      the QKV projection weights shard along the KV-head axis (1/tp of
+      the pool bytes per shard), block tables / frontiers / TopK page
+      ids stay replicated in the one global physical page-id space, and
+      both step functions run as per-shard ``shard_map`` bodies whose
+      only cross-shard traffic is an all-gather of independent per-head
+      attention outputs — logits are *bitwise-identical* to the tp=1
+      engine, so preemption-resume and prefix-cache guarantees survive
+      sharding unchanged.  Requires ``tp`` to divide ``n_heads`` and
+      ``n_kv_heads``; each shard runs its own NSB hot-set
+      (``metrics()["nsb_shard_hit_rates"]``).
     """
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 64,
@@ -398,7 +524,8 @@ class PagedEngine:
                  prefix_cache: bool = True,
                  kernel: str = "xla",
                  donate_pools: bool = True,
-                 row_bucketing: bool = True) -> None:
+                 row_bucketing: bool = True,
+                 mesh=None) -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -410,6 +537,22 @@ class PagedEngine:
         if kernel not in ("xla", "pallas"):
             raise ValueError(f"kernel must be 'xla' or 'pallas', "
                              f"got {kernel!r}")
+        self.mesh = mesh
+        if mesh is not None:
+            if sharding.SERVE_TP_AXIS not in dict(mesh.shape):
+                raise ValueError(
+                    f"serve mesh needs a {sharding.SERVE_TP_AXIS!r} "
+                    f"axis, got {tuple(dict(mesh.shape))} (use "
+                    "launch.mesh.make_serve_mesh)")
+            self.tp = int(dict(mesh.shape)[sharding.SERVE_TP_AXIS])
+            if cfg.n_kv_heads % self.tp or cfg.n_heads % self.tp:
+                raise ValueError(
+                    f"tp={self.tp} must divide both head counts "
+                    f"(n_heads={cfg.n_heads}, n_kv_heads="
+                    f"{cfg.n_kv_heads}): GQA groups shard whole, one "
+                    "KV-head slice per shard")
+        else:
+            self.tp = 1
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -433,6 +576,10 @@ class PagedEngine:
         self.chunk = chunk
         self.stats = PagedServeStats()
         self.hot = capture.PageCache(nsb_pages)
+        # per-shard NSBs under TP: each model shard scores only the
+        # pages its own KV heads select (the paper's per-NPU buffer)
+        self.hot_shards = (capture.ShardedPageCache(self.tp, nsb_pages)
+                           if self.tp > 1 else None)
         self._seen_pages: set[int] = set()
         self.recorder = None
         if capture_trace:
@@ -446,6 +593,11 @@ class PagedEngine:
             n_pages=self.n_pages, page_tokens=self.page,
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, dtype_bytes=jnp.dtype(kv_dt).itemsize)
+        # same per-page fetch size the capture recorder charges
+        # (kv_dtype_bytes models the production KV dtype, bf16 by
+        # default), so demand_bytes and the captured-trace replay count
+        # identical bytes per page
+        self.stats.row_bytes = 2 * self.page * cfg.hd * kv_dtype_bytes
         shape = (cfg.n_layers, self.n_pages, self.page, cfg.n_kv_heads,
                  cfg.hd)
         self.k_pool = jnp.zeros(shape, kv_dt)
@@ -457,10 +609,46 @@ class PagedEngine:
         # self.{k,v,s}_pool to the outputs, so XLA updates the pools in
         # place instead of round-tripping a full pool-sized copy per call
         donate = (1, 2, 3) if donate_pools else ()
-        self._decode = jax.jit(_paged_decode_fn(cfg, kernel),
-                               donate_argnums=donate)
-        self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk),
-                                donate_argnums=donate)
+        if mesh is None:
+            self._pool_shardings = None
+            self._decode = jax.jit(_paged_decode_fn(cfg, kernel),
+                                   donate_argnums=donate)
+            self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk),
+                                    donate_argnums=donate)
+        else:
+            # tensor parallelism: pools live KV-head-sharded on the mesh
+            # (1/tp of the pool bytes per shard), params per the serve
+            # TP rules (QKV head-sharded, the rest replicated), and both
+            # step functions run as per-shard shard_map bodies — see
+            # _paged_decode_fn for why this keeps logits bitwise equal
+            # to tp=1
+            kv_spec, s_spec = sharding.serve_pool_specs()
+            self._pool_shardings = (
+                NamedSharding(mesh, _norm_spec(kv_spec)),
+                NamedSharding(mesh, _norm_spec(kv_spec)),
+                NamedSharding(mesh, _norm_spec(s_spec)))
+            self.k_pool = jax.device_put(self.k_pool,
+                                         self._pool_shardings[0])
+            self.v_pool = jax.device_put(self.v_pool,
+                                         self._pool_shardings[1])
+            self.s_pool = jax.device_put(self.s_pool,
+                                         self._pool_shardings[2])
+            pspecs = sharding.serve_param_specs(params)
+            self.params = jax.device_put(
+                params, jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                     pspecs,
+                                     is_leaf=lambda x: isinstance(x, P)))
+            axis = sharding.SERVE_TP_AXIS
+            self._decode = jax.jit(
+                _shard_serve_fn(
+                    _paged_decode_fn(cfg, kernel, self.tp, axis),
+                    mesh, pspecs, n_rep_args=3, sel_out=True),
+                donate_argnums=donate)
+            self._prefill = jax.jit(
+                _shard_serve_fn(
+                    _paged_prefill_fn(cfg, chunk, self.tp, axis),
+                    mesh, pspecs, n_rep_args=4),
+                donate_argnums=donate)
         self.now = 0
         self._next_rid = 0
         self.requests: dict[int, Request] = {}
@@ -508,6 +696,16 @@ class PagedEngine:
         self.k_pool = self.k_pool.at[:, dst].set(self.k_pool[:, src])
         self.v_pool = self.v_pool.at[:, dst].set(self.v_pool[:, src])
         self.s_pool = self.s_pool.at[:, dst].set(self.s_pool[:, src])
+        if self._pool_shardings is not None:
+            # eager scatter output sharding is propagation-dependent:
+            # re-pin so the next donated jit call sees the exact pool
+            # layout it expects (no-op when propagation already matched)
+            self.k_pool = jax.device_put(self.k_pool,
+                                         self._pool_shardings[0])
+            self.v_pool = jax.device_put(self.v_pool,
+                                         self._pool_shardings[1])
+            self.s_pool = jax.device_put(self.s_pool,
+                                         self._pool_shardings[2])
         self.stats.cow_page_copies += len(copies)
 
     def _run_prefill(self, job: PrefillJob) -> None:
@@ -556,6 +754,7 @@ class PagedEngine:
             jnp.asarray(token), jnp.asarray(pos), jnp.asarray(bts))
         lg = np.asarray(logits)
         sel0 = np.asarray(sel[0])                    # layer-0 [R,KV,K]
+        kv_l = self.cfg.n_kv_heads // self.tp        # KV heads per shard
         for i, req in enumerate(rows):
             frontier = req.computed == req.total_len - 1
             req.computed += 1
@@ -563,10 +762,14 @@ class PagedEngine:
             if self.recorder is not None:
                 # a request with fewer valid pages than the TopK budget
                 # pads its selection with NULL (masked in attention, no
-                # data fetched) — drop those from the traffic record
-                for head_sel in sel0[i]:
-                    self.recorder.record(head_sel[head_sel != NULL_PAGE],
-                                         rid=req.rid, step=self.now)
+                # data fetched) — drop those from the traffic record.
+                # Under TP the event is tagged with the shard whose KV
+                # heads produced it (heads shard in contiguous slices).
+                for h, head_sel in enumerate(sel0[i]):
+                    self.recorder.record(
+                        head_sel[head_sel != NULL_PAGE],
+                        rid=req.rid, step=self.now,
+                        shard=h // kv_l if self.tp > 1 else -1)
             if frontier:
                 req.out_tokens.append(int(lg[i].argmax()))
                 req.last_logits = lg[i].copy()
@@ -584,6 +787,12 @@ class PagedEngine:
                 self.stats.nsb_hits += 1
             else:
                 self.stats.nsb_misses += 1
+        if self.hot_shards is not None:
+            # per-shard NSBs see only their own KV heads' selections
+            for s in range(self.tp):
+                su = np.unique(sel0[:r_act, s * kv_l:(s + 1) * kv_l])
+                for p in su[su != NULL_PAGE]:
+                    self.hot_shards.touch(int(p), s)
 
     # -- iteration loop ------------------------------------------------------
 
@@ -650,7 +859,7 @@ class PagedEngine:
                 if r.finished_at >= 0]
         lat = [r.latency() for r in done]
         ttft = [r.ttft() for r in done]
-        return {
+        out = {
             "n_finished": len(done),
             "iterations": self.stats.iterations,
             "tokens_out": self.stats.tokens_out,
@@ -659,9 +868,13 @@ class PagedEngine:
             "p50_ttft": percentile(ttft, 0.50),
             "p99_ttft": percentile(ttft, 0.99),
             "nsb_hot_hit_rate": self.stats.hot_hit_rate,
+            "offchip_fetch_reduction": self.stats.offchip_reduction,
+            "tp": self.tp,
             "preemptions": self.stats.preemptions,
             "pages_peak_in_use": self.allocator.stats.peak_in_use,
             "kv_pool_mib": self.pool_cfg.pool_bytes / 2 ** 20,
+            "kv_pool_mib_per_shard":
+                self.pool_cfg.pool_bytes / 2 ** 20 / self.tp,
             "prefill_tokens_run": self.stats.prefill_tokens,
             "prefill_tokens_skipped": self.scheduler.prefill_tokens_skipped,
             "prefix_hit_pages": self.allocator.stats.prefix_hits,
@@ -671,3 +884,8 @@ class PagedEngine:
             "n_prefill_traces": self.n_prefill_traces(),
             "decode_rows_padded": self.stats.decode_rows_padded,
         }
+        if self.hot_shards is not None:
+            roll = self.hot_shards.rollup()
+            out["nsb_shard_hit_rates"] = roll["per_shard"]
+            out["nsb_shard_rollup_hit_rate"] = roll["hit_rate"]
+        return out

@@ -138,6 +138,10 @@ def row_buckets(max_rows: int) -> tuple[int, ...]:
     """Power-of-two decode-row buckets up to ``max_rows``: the fixed jit
     shapes a bucketing engine pads ragged batches to.  O(log R_max)
     buckets -> O(log R_max) decode traces over any workload."""
+    if max_rows <= 0:
+        raise ValueError(f"max_rows must be >= 1, got {max_rows}: a "
+                         "degenerate bucket list would pad every decode "
+                         "batch to zero rows")
     out = []
     b = 1
     while b < max_rows:
@@ -148,11 +152,18 @@ def row_buckets(max_rows: int) -> tuple[int, ...]:
 
 
 def bucket_for(n_rows: int, buckets: tuple[int, ...]) -> int:
-    """Smallest bucket holding ``n_rows`` (the padded batch shape)."""
+    """Smallest bucket holding ``n_rows`` (the padded batch shape).
+
+    ``n_rows`` above the largest bucket is an error, never a clamp: the
+    bucket is the padded batch shape the engine allocates, so silently
+    returning ``buckets[-1]`` would let a plan carry more decode rows
+    than the jitted batch has slots (rows dropped at pad time)."""
     for b in buckets:
         if n_rows <= b:
             return b
-    return buckets[-1]
+    raise ValueError(f"n_rows={n_rows} exceeds the largest row bucket "
+                     f"{buckets[-1]}: the padded batch cannot hold the "
+                     "planned decode rows")
 
 
 class PoissonArrivals:

@@ -182,6 +182,56 @@ def param_spec(path: str, shape: tuple, mesh_axes: dict,
     return P(*fixed)
 
 
+# -- serve-layer tensor parallelism --------------------------------------------
+#
+# The paged serve engine shards along ONE axis only: the KV-head axis,
+# over a 1-axis ("model",) mesh.  The sharded objects are the physical
+# K/V/summary page pools and the QKV projection weights (head-sharded
+# columns); *everything else* — output projection, FFN, norms, embed,
+# lm_head — stays replicated, and per-head attention outputs are
+# all-gathered before the output projection.  That asymmetry is
+# deliberate: every cross-shard combine is a concatenation of
+# independent per-head results, never an arithmetic reduction (no
+# psum), so tp>1 logits are bitwise-identical to tp=1 — the serve
+# layer's preemption-resume guarantee extended across shards.  (The
+# training-path PARAM_RULES above shard FFN/vocab too and accept
+# reduction-order drift; serving trades those FLOP savings for the
+# bitwise invariant while keeping the KV pool — the memory-dominant
+# object — at 1/tp bytes per shard.)
+
+SERVE_TP_AXIS = "model"
+
+_SERVE_TP_SHARDED = re.compile(r"\b(wq|wk|wv|bq|bk|bv)$")
+
+
+def serve_pool_specs(axis: str = SERVE_TP_AXIS) -> tuple[P, P]:
+    """(k/v pool spec, summary pool spec) for the paged engine's physical
+    pools: ``[L, P, page, KV, D]`` and ``[L, P, KV, D]``, sharded on the
+    KV-head dim only — the page-id dim is never sharded, so the
+    allocator/scheduler/NVR-capture layers keep one global physical
+    page-id space."""
+    return (P(None, None, None, axis, None), P(None, None, axis, None))
+
+
+def serve_param_specs(params, axis: str = SERVE_TP_AXIS):
+    """PartitionSpec pytree for PagedEngine tensor parallelism.
+
+    QKV projection weights/biases shard their trailing (flattened head)
+    axis; every other leaf is fully replicated.  The flat head axis is
+    head-major, so a 1/tp column slice is a contiguous block of whole
+    GQA groups — consistent with the KV-head slice of the pools
+    (requires ``n_heads % tp == 0 and n_kv_heads % tp == 0``).
+    """
+    def spec(path, leaf):
+        name = "/".join(getattr(k, "key", str(k)) for k in path)
+        if _SERVE_TP_SHARDED.search(name):
+            nd = len(np.shape(leaf)) if not hasattr(leaf, "ndim") \
+                else leaf.ndim
+            return P(*([None] * (nd - 1)), axis)
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
 def constrain_like_params(tree, stacked_prefix: str = "layers"):
     """Constrain a params-shaped pytree (e.g. gradients) to the parameter
     sharding rules — turns gradient all-reduces into reduce-scatters on

@@ -160,6 +160,62 @@ class TestPageStreamTags:
         spans = st.interleave_spans()
         assert spans[7] == (0, 2) and spans[9] == (1, 1)
 
+    def test_shard_tags_and_views(self):
+        st = capture.PageStream("t", n_rows=16, row_bytes=64,
+                                compute_per_row=1.0)
+        st.record([1, 2], rid=0, step=0, shard=0)
+        st.record([3, 4], rid=0, step=0, shard=1)
+        st.record([1, 5], rid=1, step=1, shard=0)
+        st.record([6], rid=1, step=1)           # untagged rides along
+        assert st.shard_ids() == [0, 1]
+        s0 = st.subset_shard(0)
+        assert s0.n_events == 2 and s0.rows_selected == 4
+        assert s0.rids == [0, 1]                # request tags preserved
+        assert s0.n_rows == st.n_rows           # one global page-id space
+        # per-request views keep shard attribution too
+        assert st.subset(0).shards == [0, 1]
+        assert st.subset(1).shards == [0, -1]
+        # lists stay parallel (to_trace / merge invariants)
+        assert len(st.shards) == len(st.events) == len(st.rids)
+
+
+class TestShardedNSB:
+    def test_per_shard_caches_are_independent(self):
+        spc = capture.ShardedPageCache(2, capacity_pages=4)
+        assert not spc.touch(3, 0)              # miss fills shard 0 only
+        assert spc.touch(3, 0)                  # shard-0 hit
+        assert not spc.touch(3, 1)              # shard 1 never saw page 3
+        roll = spc.rollup()
+        assert roll["hits"] == 1 and roll["misses"] == 2
+        assert roll["per_shard"][0] == 0.5 and roll["per_shard"][1] == 0.0
+        assert roll["hit_rate"] == pytest.approx(1 / 3)
+
+    def test_rollup_replays_shard_tagged_stream(self):
+        st = capture.PageStream("t", n_rows=32, row_bytes=64,
+                                compute_per_row=1.0)
+        for step in range(4):                   # heavy reuse per shard
+            st.record([1, 2, 3], shard=0, step=step)
+            st.record([9, 10], shard=1, step=step)
+        roll = capture.nsb_shard_rollup(st, nsb_pages=8, n_shards=2)
+        # first touch of each page misses, every revisit hits
+        assert roll["misses"] == 5
+        assert roll["hits"] == 3 * 3 + 2 * 3
+        assert len(roll["per_shard"]) == 2
+        # untagged streams degrade to one shard (the single-NPU case)
+        st1 = capture.PageStream("u", n_rows=8, row_bytes=64,
+                                 compute_per_row=1.0)
+        st1.record([1, 2])
+        st1.record([1, 2])
+        roll1 = capture.nsb_shard_rollup(st1, nsb_pages=4)
+        assert roll1["per_shard"] == [0.5]
+
+    def test_rollup_dedups_within_event_only(self):
+        st = capture.PageStream("t", n_rows=8, row_bytes=64,
+                                compute_per_row=1.0)
+        st.record([5, 5, 5], shard=0)           # one demand, not three
+        roll = capture.nsb_shard_rollup(st, nsb_pages=4, n_shards=1)
+        assert roll["hits"] == 0 and roll["misses"] == 1
+
 
 @pytest.mark.slow
 class TestMultiRequestRoundTrip:

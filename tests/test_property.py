@@ -13,6 +13,8 @@ from repro.kernels import coalesce_indices, ops
 from repro.models import layers
 from repro.optim import compress
 from repro.serve.kv_allocator import NULL_PAGE, KVBlockAllocator
+from repro.serve.scheduler import (Request, RequestState, Scheduler,
+                                   row_buckets)
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -105,6 +107,107 @@ def test_kv_allocator_refcount_invariants(ops_list, n_pages):
         al.free_request(rid)
     _alloc_invariants(al)
     assert al.pages_in_use == 0
+
+
+@SET
+@given(
+    st.lists(st.tuples(st.integers(1, 16),     # prompt_len
+                       st.integers(1, 5),      # max_new_tokens
+                       st.integers(0, 12)),    # arrival tick
+            min_size=1, max_size=8),
+    st.integers(6, 16),                        # allocatable pool pages
+    st.integers(1, 8),                         # max_batch
+    st.integers(1, 24),                        # token budget
+    st.booleans(),                             # row bucketing on/off
+)
+def test_scheduler_plan_invariants(reqs, pool, max_batch, budget,
+                                   buckets_on):
+    """Random workloads through ``Scheduler.schedule``: per-iteration
+    plan invariants under preemption + bucket top-up.
+
+    * no rid planned twice in one iteration (decode and prefill are
+      disjoint; a request never decodes twice per plan),
+    * ``len(plan.decode) <= plan.decode_bucket <= max_batch`` when
+      bucketing, and <= max_batch always,
+    * budget accounting: without buckets ``plan.n_tokens`` never
+      exceeds the budget; with buckets only top-up decode rows may ride
+      over it, bounded by the bucket boundary,
+    * preempted requests keep FIFO priority: they wait *ahead* of
+      never-admitted requests, and admission order follows arrival,
+    * every request that fits the pool eventually finishes, releasing
+      every page.
+    """
+    al = KVBlockAllocator(n_pages=pool + 1, page_tokens=4)
+    bks = row_buckets(max_batch) if buckets_on else ()
+    s = Scheduler(al, max_batch=max_batch, chunk=4, token_budget=budget,
+                  row_buckets=bks)
+    live = []
+    for rid, (plen, gen, tick) in enumerate(reqs):
+        # clamp so every request individually fits (engine submit() bars
+        # the rest); keeps the liveness assertion meaningful
+        while al.pages_for_tokens(plen + gen) > al.capacity:
+            plen = max(1, plen // 2)
+            gen = max(1, gen - 1)
+        live.append((tick, Request(rid=rid, prompt=np.arange(plen),
+                                   max_new_tokens=gen,
+                                   arrival=float(tick))))
+    live.sort(key=lambda x: (x[0], x[1].rid))
+    pending = list(live)
+    for now in range(400):
+        while pending and pending[0][0] <= now:
+            s.add(pending.pop(0)[1])
+        plan = s.schedule(float(now))
+        # -- plan invariants
+        rids = [r.rid for r in plan.decode] \
+            + [j.req.rid for j in plan.prefill]
+        assert len(rids) == len(set(rids)), "rid planned twice"
+        assert len(plan.decode) <= max_batch
+        prefill_toks = sum(j.n_tokens for j in plan.prefill)
+        if bks and plan.decode:
+            assert plan.decode_bucket in bks
+            assert len(plan.decode) <= plan.decode_bucket <= max_batch
+            # only bucket top-up rows may exceed the budget, and the
+            # budget admitted at least one decode row before top-up
+            assert plan.n_tokens <= budget + plan.decode_bucket - 1
+        else:
+            assert plan.decode_bucket == 0
+            assert plan.n_tokens <= budget
+        # -- queue invariants: preempted requests sit ahead of
+        # never-admitted ones (appendleft vs append)
+        waiting = list(s.waiting)
+        seen_fresh = False
+        for r in waiting:
+            if r.admission_seq < 0:
+                seen_fresh = True
+            else:
+                assert not seen_fresh, "preempted request lost priority"
+        # drive the fake model
+        for job in plan.prefill:
+            job.req.computed += job.n_tokens
+            if job.req.computed == job.req.prompt_len \
+                    and not job.req.out_tokens:
+                job.req.out_tokens.append(0)
+                job.req.first_token_at = float(now)
+                if job.req.done:
+                    s.finish(job.req, float(now))
+        for req in plan.decode:
+            frontier = req.computed == req.total_len - 1
+            req.computed += 1
+            if frontier:
+                req.out_tokens.append(0)
+                if req.done:
+                    s.finish(req, float(now))
+        if not pending and not s.has_work:
+            break
+    assert not s.has_work, "scheduler failed to drain the workload"
+    for _, r in live:
+        assert r.state is RequestState.FINISHED
+        assert len(r.out_tokens) == r.max_new_tokens
+    assert al.pages_in_use == 0
+    # admission order followed arrival order (FIFO, no bypass)
+    admitted = sorted((r for _, r in live), key=lambda r: r.admission_seq)
+    arrivals = [r.arrival for r in admitted]
+    assert arrivals == sorted(arrivals)
 
 
 @SET

@@ -1,5 +1,7 @@
 """Continuous-batching serve layer: allocator, scheduler, paged engine."""
 
+import math
+
 import numpy as np
 import pytest
 
@@ -163,6 +165,63 @@ class TestPrefixCacheAllocator:
         assert al.table(1)[0] not in al.table(0)
 
 
+class TestPercentile:
+    """``engine.percentile`` is the documented nearest-rank (ceil-rank)
+    definition: the ceil(q*n)-th order statistic, 1-indexed — numpy's
+    ``inverted_cdf``.  The old round()-based form banker's-rounded .5
+    ranks upward (p50 of 4 samples gave the 3rd order statistic)."""
+
+    def test_p50_of_four_is_second_order_statistic(self):
+        from repro.serve.engine import percentile
+
+        xs = [4.0, 1.0, 3.0, 2.0]
+        assert percentile(xs, 0.5) == 2.0
+        assert percentile(xs, 0.5) == float(np.percentile(
+            xs, 50, method="closest_observation"))
+
+    def test_matches_numpy_inverted_cdf(self):
+        from repro.serve.engine import percentile
+
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            n = int(rng.integers(1, 40))
+            xs = list(rng.normal(size=n))
+            q = float(rng.choice([0.0, 0.5, 0.9, 0.95, 0.99, 1.0,
+                                  rng.uniform()]))
+            want = float(np.percentile(xs, q * 100,
+                                       method="inverted_cdf"))
+            assert percentile(xs, q) == want, (n, q)
+
+    def test_always_an_order_statistic_and_nan_on_empty(self):
+        from repro.serve.engine import percentile
+
+        rng = np.random.default_rng(1)
+        xs = list(rng.normal(size=17))
+        for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+            assert percentile(xs, q) in xs
+        assert math.isnan(percentile([], 0.5))
+
+
+class TestServeStatsBytes:
+    """``offchip_reduction`` is a fetch-*bytes* ratio (bytes avoided over
+    bytes demanded), the same bytes-over-bytes shape as the simulator's
+    ``demand_miss_reduction`` — not a bare event-count alias."""
+
+    def test_reduction_is_bytes_ratio(self):
+        from repro.serve.engine import ServeStats
+
+        s = ServeStats(nsb_hits=3, nsb_misses=1, row_bytes=256)
+        assert s.demand_bytes == 4 * 256
+        assert s.offchip_reduction == (3 * 256) / (4 * 256)
+
+    def test_nan_without_row_bytes_or_traffic(self):
+        from repro.serve.engine import ServeStats
+
+        assert math.isnan(ServeStats(nsb_hits=3, nsb_misses=1)
+                          .offchip_reduction)
+        assert math.isnan(ServeStats(row_bytes=64).offchip_reduction)
+
+
 def _mk(rid, plen, gen, arrival=0.0):
     return Request(rid=rid, prompt=np.arange(plen), max_new_tokens=gen,
                    arrival=arrival)
@@ -316,7 +375,18 @@ class TestRowBuckets:
         assert bucket_for(1, bks) == 1
         assert bucket_for(3, bks) == 4
         assert bucket_for(8, bks) == 8
-        assert bucket_for(99, bks) == 8          # clamped to the cap
+
+    def test_bucket_for_rejects_overflow(self):
+        """More rows than the largest bucket is a plan that would drop
+        decode rows at pad time — an error, never a silent clamp."""
+        with pytest.raises(ValueError, match="exceeds the largest"):
+            bucket_for(9, row_buckets(8))
+
+    def test_row_buckets_rejects_degenerate_max(self):
+        with pytest.raises(ValueError):
+            row_buckets(0)
+        with pytest.raises(ValueError):
+            row_buckets(-3)
 
     def test_bucket_count_is_log_of_max_batch(self):
         import math
@@ -428,6 +498,16 @@ class TestPagedEngine:
         assert all(len(r.out_tokens) == r.max_new_tokens
                    for r in eng.requests.values())
         assert eng.allocator.pages_in_use == 0
+        # bytes-based off-chip metric is live (and, with one uniform
+        # page size, numerically the hit rate — by a bytes definition);
+        # row_bytes matches the capture recorder's per-page charge
+        # (kv_dtype_bytes defaults to 2, the production bf16 KV)
+        assert eng.stats.row_bytes == 2 * cfg.kv_page * cfg.hd * 2
+        assert (eng.stats.offchip_reduction
+                == pytest.approx(eng.stats.hot_hit_rate))
+        assert eng.metrics()["offchip_fetch_reduction"] == pytest.approx(
+            eng.stats.nsb_hits * eng.stats.row_bytes
+            / eng.stats.demand_bytes)
 
     def test_preemption_resume_identical_logits(self, setup):
         """Allocator exhaustion forces preemption; recompute + decode
