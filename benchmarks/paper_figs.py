@@ -428,6 +428,16 @@ def tp_serve_bench():
     return _tp()
 
 
+def runahead_bench():
+    """Online vector runahead (off / imp / nvr) on shared-prefix Poisson
+    serving: bitwise token/logit parity across modes, NSB hit-rate lift
+    over the demand-LRU no-runahead tier, prediction accuracy/coverage/
+    over-fetch, modeled memory-stall throughput gain (defined in
+    benchmarks/serve_bench.py; lazy import as above)."""
+    from .serve_bench import runahead_bench as _ra
+    return _ra()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -443,4 +453,5 @@ ALL = {
     "prefix_bench": prefix_bench,      # COW prefix cache on/off
     "paged_kernel_bench": paged_kernel_bench,  # donated+bucketed decode
     "tp_serve_bench": tp_serve_bench,  # KV-head-sharded TP serving
+    "runahead_bench": runahead_bench,  # online runahead off/imp/nvr
 }

@@ -5,7 +5,13 @@ per-figure headline metrics vs the paper's claims.  Detailed per-row
 artifacts (paired CSV + JSON, via the engine sweep runner's writer) land
 in benchmarks/results/.
 
-Beyond the paper figures, six engineering benches ride along:
+Every completed benchmark additionally writes a committed-format
+perf-trajectory artifact ``benchmarks/results/BENCH_<name>.json``:
+the headline metrics (non-finite values nulled, keys sorted), the
+BENCH_SCALE it ran at, the git sha and the harness wall time — one
+stable file per bench that CI uploads and successive commits can diff.
+
+Beyond the paper figures, seven engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -20,6 +26,9 @@ Beyond the paper figures, six engineering benches ride along:
                       the pre-PR path (pool-copy / padded-row
                       elimination), with Pallas paged-kernel parity
                       asserted against the XLA oracle in the same run
+  runahead_bench    — online vector runahead off/imp/nvr on shared-prefix
+                      Poisson serving: bitwise parity across modes, NSB
+                      hit-rate lift + modeled stall gain asserted in-run
 
 Exit status: 0 only if every requested benchmark ran clean; a benchmark
 that raises is reported (traceback + summary line) and the process exits
@@ -33,9 +42,63 @@ instead of swallowing a broken figure.  Unknown names exit 2.
 
 from __future__ import annotations
 
+import json
+import math
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _jsonable(v):
+    """Strict-JSON view of a headline value: non-finite numbers become
+    null (the committed artifact must diff cleanly and parse under
+    ``allow_nan=False``), numpy scalars collapse to Python numbers,
+    anything opaque falls back to ``str``."""
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if v is None or isinstance(v, (bool, str, int)):
+        return v
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return str(v)
+    return f if math.isfinite(f) else None
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "-C", os.path.dirname(os.path.abspath(__file__)),
+             "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def _write_bench_json(name: str, headline: dict, us: float,
+                      sha: str) -> str:
+    """Perf-trajectory artifact: ``BENCH_<name>.json`` in the committed
+    format (sorted keys, no NaNs) so successive runs diff cleanly."""
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    payload = {
+        "bench": name,
+        "bench_scale": float(os.environ.get("BENCH_SCALE", "0.5")),
+        "git_sha": sha,
+        "harness_us": round(us, 1),
+        "headline": _jsonable(headline),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, allow_nan=False)
+        f.write("\n")
+    return path
 
 
 def main(argv=None) -> int:
@@ -51,6 +114,7 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     summaries = []
     failures = []
+    sha = _git_sha()
     for name in names:
         fn = paper_figs.ALL[name]
         t0 = time.perf_counter()
@@ -66,6 +130,7 @@ def main(argv=None) -> int:
                            else f"{k}={v}" for k, v in headline.items()
                            if k != "paper")
         print(f"{name},{us:.0f},{derived}")
+        _write_bench_json(name, headline, us, sha)
         summaries.append((name, headline))
     print("\n=== headline metrics vs paper claims ===")
     for name, h in summaries:

@@ -28,7 +28,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .machine import Cache, LINE_BYTES
+from .machine import Cache, LINE_BYTES, _E_PF
 from .trace import Trace, TraceBuilder
 from .traces import MAC_RATE, PC_IDX, _row_gather, _stream_idx
 
@@ -232,7 +232,20 @@ class PageCache:
     """NSB hot-set model over page ids, backed by the shared
     :class:`~.machine.Cache` (one fully-associative LRU set) — the same
     memory-system model the simulator uses, replacing the serving
-    engine's ad-hoc ``HotSet`` LRU so the two layers cannot drift."""
+    engine's ad-hoc ``HotSet`` LRU so the two layers cannot drift.
+
+    Two usage modes share the accounting:
+
+    * demand-LRU (the historic behaviour): every :meth:`touch` installs
+      on miss — what the NSB hit rate "would have been" for an LRU tier.
+    * speculative (the online runahead tier's twin): pages enter only
+      through :meth:`stage` (counted as prefetch fills by the underlying
+      :class:`~.machine.Cache` stats) and demand traffic probes with
+      ``install=False`` — misses never install, exactly the physical
+      staging buffer's behaviour.  :attr:`accuracy` (staged pages that
+      got used) and :attr:`coverage` (demand touches served) then fall
+      straight out of the Cache's built-in prefetch accounting.
+    """
 
     def __init__(self, capacity_pages: int) -> None:
         self.capacity = capacity_pages
@@ -241,25 +254,66 @@ class PageCache:
                            name="NSB-pages")
         self._now = 0.0
 
-    def touch(self, page: int) -> bool:
-        """Access one page id; returns True on a hot-set hit."""
+    def touch(self, page: int, install: bool = True) -> bool:
+        """Access one page id; returns True on a hot-set hit.
+
+        ``install=False`` is the physical-tier demand probe: a miss is
+        counted but the page is *not* brought in — only :meth:`stage`
+        installs there."""
         self._now += 1.0
         t = self.cache.probe(int(page), self._now)
         if t is None:
-            self.cache.fill(int(page), self._now)
-            self.cache.drain(self._now)   # install immediately
+            if install:
+                self.cache.fill(int(page), self._now)
+                self.cache.drain(self._now)   # install immediately
             return False
         return True
+
+    def stage(self, page: int) -> None:
+        """Speculatively install one page (no probe: hit/miss stats are
+        untouched; the fill is tagged prefetch so accuracy accounting
+        sees it)."""
+        self._now += 1.0
+        self.cache.fill(int(page), self._now, prefetch=True)
+        self.cache.drain(self._now)
+
+    def drop(self, page: int) -> None:
+        """Remove one page without stats side effects beyond the
+        unused-prefetch-evicted counter — the invalidation twin of the
+        physical tier dropping a stale staged copy."""
+        p = int(page)
+        s = self.cache.sets[p % self.cache.num_sets]
+        entry = s.pop(p, None)
+        if entry == _E_PF:            # staged, never demanded: wasted
+            self.cache.stats.prefetch_unused_evicted += 1
+        self.cache.mshr.pop(p, None)
 
     @property
     def stats(self):
         return self.cache.stats
 
     @property
-    def hit_rate(self) -> float:
+    def hit_rate(self) -> float | None:
+        """Demand hit rate, or None before any traffic (keeps
+        ``json.dumps(metrics, allow_nan=False)`` valid on smoke runs)."""
         s = self.cache.stats
         tot = s.hits + s.misses
-        return s.hits / tot if tot else float("nan")
+        return s.hits / tot if tot else None
+
+    @property
+    def accuracy(self) -> float | None:
+        """Fraction of staged pages demanded before eviction/drop —
+        the paper's prediction-accuracy axis.  None before staging."""
+        s = self.cache.stats
+        return s.prefetch_used / s.prefetch_fills if s.prefetch_fills \
+            else None
+
+    @property
+    def coverage(self) -> float | None:
+        """Fraction of demand touches served by the hot set — the
+        coverage axis (equals :attr:`hit_rate` for a pure-speculative
+        tier, where misses never install).  None before traffic."""
+        return self.hit_rate
 
 
 class ShardedPageCache:
@@ -283,9 +337,22 @@ class ShardedPageCache:
     def n_shards(self) -> int:
         return len(self.caches)
 
-    def touch(self, page: int, shard: int) -> bool:
-        """Access one page id on one shard's NSB; True on a hit."""
-        return self.caches[shard].touch(page)
+    def touch(self, page: int, shard: int, install: bool = True) -> bool:
+        """Access one page id on one shard's NSB; True on a hit.
+        ``install=False`` follows :meth:`PageCache.touch`."""
+        return self.caches[shard].touch(page, install=install)
+
+    def stage(self, page: int) -> None:
+        """Speculatively install on *every* shard: the page-id axis is
+        never sharded, so one staging copy lands each shard's KV-head
+        slice of the page — every shard's NSB gains the entry."""
+        for c in self.caches:
+            c.stage(page)
+
+    def drop(self, page: int) -> None:
+        """Invalidate a staged page on every shard."""
+        for c in self.caches:
+            c.drop(page)
 
     def hit_rates(self) -> list:
         """Per-shard NSB hit rates, indexed by shard."""
@@ -296,11 +363,15 @@ class ShardedPageCache:
         per-shard rates (the serve ``metrics()`` roll-up)."""
         hits = sum(c.stats.hits for c in self.caches)
         misses = sum(c.stats.misses for c in self.caches)
+        fills = sum(c.stats.prefetch_fills for c in self.caches)
+        used = sum(c.stats.prefetch_used for c in self.caches)
         tot = hits + misses
         return {
             "hits": hits,
             "misses": misses,
-            "hit_rate": hits / tot if tot else float("nan"),
+            "hit_rate": hits / tot if tot else None,
+            "accuracy": used / fills if fills else None,
+            "coverage": hits / tot if tot else None,
             "per_shard": self.hit_rates(),
         }
 

@@ -136,8 +136,9 @@ def _paged_decode_attn(phys, idx, pos, q, k_pool, v_pool, *, page_size: int,
 
 def paged_decode_attn(phys: jax.Array, idx: jax.Array, pos: jax.Array,
                       q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                      *, page_size: int,
-                      interpret: bool | None = None) -> jax.Array:
+                      *, page_size: int, interpret: bool | None = None,
+                      hot_map: jax.Array | None = None,
+                      n_demand: int = 0) -> jax.Array:
     """Paged TopK decode attention on one layer of the physical pool.
 
     Args:
@@ -149,11 +150,23 @@ def paged_decode_attn(phys: jax.Array, idx: jax.Array, pos: jax.Array,
         (int8 pools dequant with the shared fixed scale).
       page_size: tokens per physical page.
       interpret: run the Pallas interpreter (defaults to True off-TPU).
+      hot_map: optional int32 [n_demand] runahead hot-map, demand page
+        id -> staged NSB slot (-1 = not staged).  Page ids with a live
+        slot are remapped to the pool's contiguous staging tail at
+        ``n_demand + slot`` before the gather: the scalar-prefetched
+        index map then DMAs the staged copy — a sequential read from the
+        hot tier — instead of the scattered demand page.  Staged pages
+        are byte-exact copies, so the result is bitwise-unchanged.
+      n_demand: demand-region page count (tail slots start here);
+        required with ``hot_map``.
     Returns: [R, KV, G, D], parity with
       ``sparse_attention.attend_pages_paged`` (fp32 online softmax).
     """
     from .ops import on_tpu
     if interpret is None:
         interpret = not on_tpu()
+    if hot_map is not None:
+        slot = hot_map[phys]                   # [R, KV, K]; -1 = demand
+        phys = jnp.where(slot >= 0, n_demand + slot, phys)
     return _paged_decode_attn(phys, idx, pos, q, k_pool, v_pool,
                               page_size=page_size, interpret=interpret)

@@ -26,6 +26,14 @@ force host devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --continuous --tp 2 --requests 16
+
+Online runahead — between decode steps the engine predicts each live
+request's next-iteration TopK pages and stages them into a physical NSB
+tail on the KV pools (tokens stay bitwise-identical; see
+ARCHITECTURE.md "online runahead"):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --continuous --requests 16 --shared-prefix 4 --runahead nvr
 """
 
 from __future__ import annotations
@@ -50,12 +58,18 @@ def _run_single_batch(cfg, params, args):
     out = eng.generate(batch, args.gen)
     s = eng.stats
     print(f"[serve] generated {out.shape} tokens; sparse={eng.sparse}")
-    if eng.sparse:
+    if eng.sparse and s.hot_hit_rate is not None:
         print(f"[serve] NSB hot-set hit rate {s.hot_hit_rate:.3f} "
               f"(pages touched {s.pages_touched}, unique-miss "
               f"{s.nsb_misses}) -> off-chip fetch reduction "
               f"{100 * s.offchip_reduction:.1f}%")
     return out
+
+
+def _fmt(x, spec: str = ".3f") -> str:
+    """Format a metric that is None before any traffic (zero-traffic
+    smoke runs) without crashing the report."""
+    return "n/a" if x is None else format(x, spec)
 
 
 def _run_continuous(cfg, params, args):
@@ -97,7 +111,9 @@ def _run_continuous(cfg, params, args):
                       kernel=args.kernel,
                       donate_pools=not args.no_donate,
                       row_bucketing=not args.no_buckets,
-                      mesh=mesh)
+                      mesh=mesh,
+                      runahead=args.runahead,
+                      runahead_pages=args.runahead_pages)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
@@ -105,18 +121,28 @@ def _run_continuous(cfg, params, args):
           f"{m['preemptions']} preemptions, peak "
           f"{m['pages_peak_in_use']}/{eng.allocator.capacity} pages)")
     if eng.tp > 1:
-        rates = ", ".join(f"{r:.3f}" for r in m["nsb_shard_hit_rates"])
+        rates = ", ".join(_fmt(r) for r in m["nsb_shard_hit_rates"])
         print(f"[serve-cb] tp={eng.tp}: "
               f"{m['kv_pool_mib_per_shard']:.2f} MiB KV pool per shard, "
               f"per-shard NSB hit rates [{rates}] "
-              f"(roll-up {m['nsb_shard_rollup_hit_rate']:.3f})")
+              f"(roll-up {_fmt(m['nsb_shard_rollup_hit_rate'])})")
     print(f"[serve-cb] step loop: {m['n_decode_traces']} decode traces "
           f"({eng.kernel} kernel), {m['decode_rows_padded']} padded "
           f"decode rows")
-    print(f"[serve-cb] latency p50/p99 {m['p50_latency']:.0f}/"
-          f"{m['p99_latency']:.0f} iters; TTFT p50/p99 "
-          f"{m['p50_ttft']:.0f}/{m['p99_ttft']:.0f}")
-    print(f"[serve-cb] NSB hot-set hit rate {m['nsb_hot_hit_rate']:.3f}")
+    print(f"[serve-cb] latency p50/p99 {_fmt(m['p50_latency'], '.0f')}/"
+          f"{_fmt(m['p99_latency'], '.0f')} iters; TTFT p50/p99 "
+          f"{_fmt(m['p50_ttft'], '.0f')}/{_fmt(m['p99_ttft'], '.0f')}")
+    print(f"[serve-cb] NSB hot-set hit rate "
+          f"{_fmt(m['nsb_hot_hit_rate'])}")
+    if args.runahead != "off":
+        print(f"[serve-cb] runahead={m['runahead_mode']}: "
+              f"{m['runahead_staged_pages']} pages staged "
+              f"({m['runahead_stage_calls']} gathers, "
+              f"{m['runahead_invalidations']} invalidations), "
+              f"accuracy {_fmt(m['runahead_accuracy'])}, coverage "
+              f"{_fmt(m['runahead_coverage'])}, over-fetch "
+              f"{_fmt(m['runahead_overfetch'])}; demand-LRU baseline "
+              f"hit rate {_fmt(m['nsb_demand_lru_hit_rate'])}")
     if not args.no_prefix_cache:
         print(f"[serve-cb] prefix cache: {m['prefix_hit_pages']} page "
               f"hits, {m['prefill_tokens_skipped']} prompt tokens "
@@ -174,6 +200,15 @@ def main(argv=None):
                         "mesh (continuous mode; head counts must divide; "
                         "on CPU force devices with XLA_FLAGS=--xla_force"
                         "_host_platform_device_count=N)")
+    p.add_argument("--runahead", choices=("off", "imp", "nvr"),
+                   default="off",
+                   help="online runahead: predict next-iteration TopK "
+                        "pages between decode steps and stage them into "
+                        "a physical NSB tail (nvr = history + proxy "
+                        "scoring; imp = one-step-behind baseline; "
+                        "tokens bitwise-identical either way)")
+    p.add_argument("--runahead-pages", type=int, default=8,
+                   help="staging copies per iteration (runahead budget)")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")

@@ -346,7 +346,9 @@ def select_pages_blocktable(q: jax.Array, kpage_pool_li: jax.Array,
 def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
                        v_pool_li: jax.Array, idx: jax.Array,
                        phys: jax.Array, pos: jax.Array,
-                       page: int, tp_axis: str | None = None) -> jax.Array:
+                       page: int, tp_axis: str | None = None,
+                       hot_map: jax.Array | None = None,
+                       n_demand: int = 0) -> jax.Array:
     """Attend q [R,KV,G,D] to physically-gathered pages.
 
     k_pool_li / v_pool_li [P,page,KV,D] (one layer of the pool); idx
@@ -365,7 +367,18 @@ def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
     ulp level, so per-head math must run at the same shapes/positions
     as the unsharded oracle.  Returns the full-head [R,KV_total,G,D]
     when ``tp_axis`` is given.
+
+    ``hot_map``/``n_demand`` (runahead): page ids with a staged NSB
+    slot (``hot_map[p] >= 0``) redirect to the pool's contiguous
+    staging tail at ``n_demand + slot`` — a byte-exact copy, so the
+    output is bitwise-unchanged; only where the bytes are read from
+    moves.  The remap happens *before* the tp all-gather, on local
+    ids: the hot-map is replicated and the page axis never sharded,
+    so every shard resolves identically.
     """
+    if hot_map is not None:
+        slot = hot_map[phys]                       # [R,KV,K]; -1 = demand
+        phys = jnp.where(slot >= 0, n_demand + slot, phys)
     kv = k_pool_li.shape[2]
     hi = jnp.arange(kv)[None, :, None]
     # advanced indices (phys [R,KV,K], head [1,KV,1]) broadcast together,
@@ -396,7 +409,9 @@ def attend_pages_paged(q: jax.Array, k_pool_li: jax.Array,
 def attend_pages_paged_kernel(q: jax.Array, k_pool_li: jax.Array,
                               v_pool_li: jax.Array, idx: jax.Array,
                               phys: jax.Array, pos: jax.Array, page: int,
-                              interpret: bool | None = None) -> jax.Array:
+                              interpret: bool | None = None,
+                              hot_map: jax.Array | None = None,
+                              n_demand: int = 0) -> jax.Array:
     """Pallas-kernel twin of :func:`attend_pages_paged`.
 
     Same signature, same masking semantics, same fp32 online-softmax
@@ -410,7 +425,8 @@ def attend_pages_paged_kernel(q: jax.Array, k_pool_li: jax.Array,
     """
     from ..kernels.paged_decode_attn import paged_decode_attn
     return paged_decode_attn(phys, idx, pos, q, k_pool_li, v_pool_li,
-                             page_size=page, interpret=interpret)
+                             page_size=page, interpret=interpret,
+                             hot_map=hot_map, n_demand=n_demand)
 
 
 def page_summary_from_pool(k_pool_li: jax.Array, phys: jax.Array,

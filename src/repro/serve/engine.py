@@ -67,20 +67,25 @@ from ..configs.base import ArchConfig
 from ..core.nvr import capture
 from ..models import api, sparse_attention, transformer
 from ..models import layers as mlayers
+from . import runahead as runahead_mod
 from . import scheduler as scheduler_mod
 from .kv_allocator import NULL_PAGE, KVBlockAllocator, PagePoolConfig
 from .scheduler import PrefillJob, Request, Scheduler
 
 
-def percentile(xs, q: float) -> float:
+def percentile(xs, q: float) -> float | None:
     """Nearest-rank (ceil-rank) percentile: the ``ceil(q*n)``-th order
     statistic, 1-indexed — numpy's ``inverted_cdf`` method, and the one
     definition engine metrics and serve_bench share.  (The earlier
     ``round(q*(n-1))`` form banker's-rounded ``.5`` ranks upward: p50 of
-    4 samples returned the 3rd order statistic instead of the 2nd.)"""
+    4 samples returned the 3rd order statistic instead of the 2nd.)
+
+    Empty input returns None, not NaN: ``metrics()`` flows into
+    ``json.dumps``, and a NaN there emits a non-strict-JSON token that
+    breaks downstream parsers on zero-traffic smoke runs."""
     xs = sorted(xs)
     if not xs:
-        return float("nan")
+        return None
     return float(xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))])
 
 
@@ -95,9 +100,11 @@ class ServeStats:
     row_bytes: int = 0              # K+V bytes fetched per demanded page
 
     @property
-    def hot_hit_rate(self) -> float:
+    def hot_hit_rate(self) -> float | None:
+        """NSB hit rate, or None before any traffic (keeps metrics
+        strict-JSON-serialisable on zero-traffic runs)."""
         tot = self.nsb_hits + self.nsb_misses
-        return self.nsb_hits / tot if tot else float("nan")
+        return self.nsb_hits / tot if tot else None
 
     @property
     def demand_bytes(self) -> int:
@@ -108,16 +115,15 @@ class ServeStats:
         return (self.nsb_hits + self.nsb_misses) * self.row_bytes
 
     @property
-    def offchip_reduction(self) -> float:
+    def offchip_reduction(self) -> float | None:
         """Fetch-bytes reduction from the NSB hot-set: bytes *not*
         fetched (hot-set hits x per-page fetch bytes) over total demand
         bytes — the bytes-over-bytes definition the NVR simulator's
         ``demand_miss_reduction`` uses, so the two metrics compare like
-        with like.  NaN until the engine sets ``row_bytes`` and traffic
+        with like.  None until the engine sets ``row_bytes`` and traffic
         has been scored."""
         tot = self.demand_bytes
-        return (self.nsb_hits * self.row_bytes) / tot if tot \
-            else float("nan")
+        return (self.nsb_hits * self.row_bytes) / tot if tot else None
 
 
 class Engine:
@@ -242,7 +248,7 @@ class PagedServeStats(ServeStats):
 
 
 def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
-                     tp_axis: str | None = None):
+                     tp_axis: str | None = None, n_demand: int = 0):
     """Build the ragged decode step over the physical page pools.
 
     One call advances R requests by one token each: per-request positions
@@ -266,6 +272,17 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
     reduction — which is what keeps tp>1 logits bitwise-identical to
     tp=1.  Block tables, frontiers and the returned TopK ids stay in the
     one global physical page-id space.
+
+    With ``n_demand > 0`` the function is the *runahead* variant: it
+    takes a trailing ``hot_map`` argument (int32 [n_demand], demand page
+    id -> staged NSB slot, -1 = not staged) and the attention gather
+    resolves TopK ids through it, reading staged copies from the pool's
+    contiguous tail at ``n_demand + slot`` (see
+    ``sparse_attention.attend_pages_paged``).  Staged pages are
+    byte-exact copies, so logits — and the *returned selection*, which
+    stays in original demand page ids — are bitwise-identical to the
+    no-runahead variant; with ``n_demand == 0`` the built graph is
+    exactly the historic one (no extra argument, no remap ops).
     """
     page = cfg.kv_page
     dt = jnp.dtype(cfg.param_dtype)
@@ -273,7 +290,7 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
     g = cfg.n_heads // cfg.n_kv_heads        # GQA groups stay whole
     h_l = kv_l * g
 
-    def fn(params, k_pool, v_pool, s_pool, token, pos, bt):
+    def fn(params, k_pool, v_pool, s_pool, token, pos, bt, hot_map=None):
         r = token.shape[0]
         nl = bt.shape[1]
         k_sel = int(min(cfg.kv_topk_pages, nl))
@@ -298,6 +315,17 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
             vq = sparse_attention.kv_quant(v_new[:, 0], vp_.dtype)
             kp_ = kp_.at[li, phys_w, off].set(kq)
             vp_ = vp_.at[li, phys_w, off].set(vq)
+            if n_demand:
+                # write-through into the NSB tail: when the frontier
+                # page has a staged copy, mirror the new KV bytes into
+                # it so staging survives the decode's own writes.  For
+                # unstaged pages the target collapses to the primary
+                # location — a re-write of the identical values — so
+                # pool contents are unchanged either way.
+                slot_w = hot_map[phys_w]
+                wt = jnp.where(slot_w >= 0, n_demand + slot_w, phys_w)
+                kp_ = kp_.at[li, wt, off].set(kq)
+                vp_ = vp_.at[li, wt, off].set(vq)
             summ = sparse_attention.page_summary_from_pool(
                 kp_[li], phys_w, off + 1)
             sp_ = sp_.at[li, phys_w].set(summ)
@@ -309,7 +337,8 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
                 # end to end; per-head outputs concat across shards
                 # (tolerance-level parity, as on a single shard)
                 o = sparse_attention.attend_pages_paged_kernel(
-                    qh, kp_[li], vp_[li], idx, phys, pos, page)
+                    qh, kp_[li], vp_[li], idx, phys, pos, page,
+                    hot_map=hot_map, n_demand=n_demand)
                 o = o.reshape(r, 1, h_l, cfg.hd)
                 if tp_axis is not None:
                     o = jax.lax.all_gather(o, tp_axis, axis=2,
@@ -321,7 +350,7 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
                 # attend_pages_paged)
                 o = sparse_attention.attend_pages_paged(
                     qh, kp_[li], vp_[li], idx, phys, pos, page,
-                    tp_axis=tp_axis)
+                    tp_axis=tp_axis, hot_map=hot_map, n_demand=n_demand)
                 o = o.reshape(r, 1, cfg.n_heads if tp_axis is not None
                               else h_l, cfg.hd)
             xc = xc + mlayers.attn_out(o, lp, cfg.d_model)
@@ -514,6 +543,21 @@ class PagedEngine:
       sharding unchanged.  Requires ``tp`` to divide ``n_heads`` and
       ``n_kv_heads``; each shard runs its own NSB hot-set
       (``metrics()["nsb_shard_hit_rates"]``).
+    * ``runahead="off" | "imp" | "nvr"`` — the online runahead stage
+      (see :mod:`.runahead` and the "online runahead" section of
+      ARCHITECTURE.md).  ``"nvr"`` predicts each live request's
+      next-iteration TopK pages between decode steps (history
+      predictors filtered DARE-style, layer-0 proxy scoring for the
+      rest) and stages them into a physical NSB tail appended to the
+      k/v pools; the decode gather resolves TopK ids through the
+      hot-map into the staged copies.  ``"imp"`` is the one-step-behind
+      baseline: it stages exactly the pages the current step selected.
+      Staged pages are byte-exact copies and block tables stay
+      authoritative, so tokens and logits are bitwise-identical with
+      runahead on or off — mispredictions cost staging bandwidth only.
+      ``runahead_pages`` bounds staging copies per iteration;
+      ``nsb_pages`` sizes the staging tail (and the demand-LRU
+      comparator).
     """
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 64,
@@ -525,7 +569,9 @@ class PagedEngine:
                  kernel: str = "xla",
                  donate_pools: bool = True,
                  row_bucketing: bool = True,
-                 mesh=None) -> None:
+                 mesh=None,
+                 runahead: str = "off",
+                 runahead_pages: int = 8) -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -537,6 +583,9 @@ class PagedEngine:
         if kernel not in ("xla", "pallas"):
             raise ValueError(f"kernel must be 'xla' or 'pallas', "
                              f"got {kernel!r}")
+        if runahead not in runahead_mod.MODES:
+            raise ValueError(f"runahead must be one of "
+                             f"{runahead_mod.MODES}, got {runahead!r}")
         self.mesh = mesh
         if mesh is not None:
             if sharding.SERVE_TP_AXIS not in dict(mesh.shape):
@@ -568,10 +617,25 @@ class PagedEngine:
         self.donate_pools = donate_pools
         self.row_buckets = (scheduler_mod.row_buckets(max_batch)
                             if row_bucketing else ())
+        # online runahead: a physical NSB staging tail appended to the
+        # k/v pools, a hot-map resolving TopK ids into it, and a
+        # predict->filter->stage pipeline between decode steps.  With
+        # runahead="off" everything below is inert and the decode graph
+        # is the exact historic one.
+        self.runahead = runahead
+        self.runahead_pages = runahead_pages
+        self.nsb_slots = (min(nsb_pages, self.n_pages - 1)
+                          if runahead != "off" else 0)
+        self._tier = (runahead_mod.NSBHotTier(self.n_pages,
+                                              self.nsb_slots)
+                      if runahead != "off" else None)
+        self._predictor = (runahead_mod.RunaheadPredictor(mode=runahead)
+                           if runahead != "off" else None)
         self.scheduler = Scheduler(
             self.allocator, max_batch=max_batch, chunk=chunk,
             token_budget=token_budget or (max_batch + chunk),
-            row_buckets=self.row_buckets)
+            row_buckets=self.row_buckets,
+            runahead_pages=runahead_pages if runahead != "off" else 0)
         self.max_batch = max_batch
         self.chunk = chunk
         self.stats = PagedServeStats()
@@ -598,8 +662,13 @@ class PagedEngine:
         # default), so demand_bytes and the captured-trace replay count
         # identical bytes per page
         self.stats.row_bytes = 2 * self.page * cfg.hd * kv_dtype_bytes
-        shape = (cfg.n_layers, self.n_pages, self.page, cfg.n_kv_heads,
-                 cfg.hd)
+        # the k/v pools carry the demand region [0, n_pages) plus the
+        # contiguous NSB staging tail [n_pages, n_pages + nsb_slots):
+        # staged copies live there, addressed via the hot-map.  The
+        # summary pool stays demand-sized — selection never reads the
+        # tail, only the attention gather does.
+        shape = (cfg.n_layers, self.n_pages + self.nsb_slots, self.page,
+                 cfg.n_kv_heads, cfg.hd)
         self.k_pool = jnp.zeros(shape, kv_dt)
         self.v_pool = jnp.zeros(shape, kv_dt)
         self.s_pool = jnp.zeros(
@@ -609,10 +678,16 @@ class PagedEngine:
         # self.{k,v,s}_pool to the outputs, so XLA updates the pools in
         # place instead of round-tripping a full pool-sized copy per call
         donate = (1, 2, 3) if donate_pools else ()
+        # runahead variants take the trailing replicated hot_map arg and
+        # remap gathers into the staging tail; n_demand=0 builds the
+        # exact historic graph (bitwise anchor for runahead="off")
+        n_demand = self.n_pages if runahead != "off" else 0
+        n_rep_decode = 3 if runahead == "off" else 4
         if mesh is None:
             self._pool_shardings = None
-            self._decode = jax.jit(_paged_decode_fn(cfg, kernel),
-                                   donate_argnums=donate)
+            self._decode = jax.jit(
+                _paged_decode_fn(cfg, kernel, n_demand=n_demand),
+                donate_argnums=donate)
             self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk),
                                     donate_argnums=donate)
         else:
@@ -641,14 +716,45 @@ class PagedEngine:
             axis = sharding.SERVE_TP_AXIS
             self._decode = jax.jit(
                 _shard_serve_fn(
-                    _paged_decode_fn(cfg, kernel, self.tp, axis),
-                    mesh, pspecs, n_rep_args=3, sel_out=True),
+                    _paged_decode_fn(cfg, kernel, self.tp, axis,
+                                     n_demand=n_demand),
+                    mesh, pspecs, n_rep_args=n_rep_decode, sel_out=True),
                 donate_argnums=donate)
             self._prefill = jax.jit(
                 _shard_serve_fn(
                     _paged_prefill_fn(cfg, chunk, self.tp, axis),
                     mesh, pspecs, n_rep_args=4),
                 donate_argnums=donate)
+        self._proxy = None
+        self._stage = None
+        self.tier_shards = None
+        if self._tier is not None:
+            # the staging gather: copy predicted demand pages into the
+            # NSB tail in one donated jit (in-place pool update, no
+            # pool-sized round trip).  src/dst are padded to a fixed
+            # length with (0, 0) self-copies — page 0 is the reserved
+            # scratch page, so padding is a value-identical no-op and
+            # the call compiles exactly once.
+            def _stage_body(k_pool, v_pool, src, dst):
+                return (k_pool.at[:, dst].set(k_pool[:, src]),
+                        v_pool.at[:, dst].set(v_pool[:, src]))
+            self._stage = jax.jit(
+                _stage_body, donate_argnums=(0, 1),
+                out_shardings=(None if mesh is None else
+                               (self._pool_shardings[0],
+                                self._pool_shardings[1])))
+            if runahead == "nvr":
+                # the address-generation slice (layer-0 proxy scorer);
+                # speculation-only, so plain jit is fine under tp (GSPMD
+                # handles the sharded wq; no bitwise contract needed)
+                self._proxy = jax.jit(runahead_mod.make_proxy_scorer(cfg))
+            if self.tp > 1:
+                # per-shard runahead rollups: the page axis is never
+                # sharded, so one staging copy lands every shard's NSB —
+                # mirror stage/drop into per-shard accounting twins
+                self.tier_shards = capture.ShardedPageCache(
+                    self.tp, self.nsb_slots)
+                self._tier.mirrors.append(self.tier_shards)
         self.now = 0
         self._next_rid = 0
         self.requests: dict[int, Request] = {}
@@ -683,6 +789,8 @@ class PagedEngine:
         if req.done:
             self.scheduler.finish(req, self.now)
             self.stats.finished += 1
+            if self._predictor is not None:
+                self._predictor.forget(req.rid)
 
     def _apply_cow_copies(self) -> None:
         """Replay the allocator's pending copy-on-write page copies onto
@@ -693,6 +801,10 @@ class PagedEngine:
             return
         src = np.asarray([s for s, _ in copies], dtype=np.int32)
         dst = np.asarray([d for _, d in copies], dtype=np.int32)
+        if self._tier is not None:
+            # COW destinations are about to carry fresh bytes: no staged
+            # copy of their previous life may survive
+            self._tier.invalidate(int(d) for d in dst)
         self.k_pool = self.k_pool.at[:, dst].set(self.k_pool[:, src])
         self.v_pool = self.v_pool.at[:, dst].set(self.v_pool[:, src])
         self.s_pool = self.s_pool.at[:, dst].set(self.s_pool[:, src])
@@ -713,6 +825,13 @@ class PagedEngine:
         toks = np.zeros((self.chunk,), dtype=np.int32)
         toks[: job.n_tokens] = req.prompt[job.start:job.start + job.n_tokens]
         bt = self.allocator.table_array(req.rid, self.n_logical)
+        if self._tier is not None:
+            # the chunk rewrites KV (and summaries) on these pages:
+            # staged copies of them are stale the moment the call runs
+            tbl = self.allocator.table(req.rid)
+            p0 = job.start // self.page
+            p1 = (job.start + job.n_tokens - 1) // self.page
+            self._tier.invalidate(tbl[p0:p1 + 1])
         logits, self.k_pool, self.v_pool, self.s_pool = self._prefill(
             self.params, self.k_pool, self.v_pool, self.s_pool,
             jnp.asarray(toks), np.int32(job.start), np.int32(job.n_tokens),
@@ -749,9 +868,17 @@ class PagedEngine:
             token[i] = req.seq[req.computed]
             pos[i] = req.computed
             bts[i] = self.allocator.table_array(req.rid, self.n_logical)
+        hot_args = ()
+        if self._tier is not None:
+            # frontier pages are written inside this call, but the
+            # decode body write-throughs the new bytes into any staged
+            # copy (see _paged_decode_fn), so their entries stay live —
+            # snapshot the hot-map the gather will resolve through
+            hot_args = (jnp.asarray(self._tier.hot_map().copy()),)
         logits, self.k_pool, self.v_pool, self.s_pool, sel = self._decode(
             self.params, self.k_pool, self.v_pool, self.s_pool,
-            jnp.asarray(token), jnp.asarray(pos), jnp.asarray(bts))
+            jnp.asarray(token), jnp.asarray(pos), jnp.asarray(bts),
+            *hot_args)
         lg = np.asarray(logits)
         sel0 = np.asarray(sel[0])                    # layer-0 [R,KV,K]
         kv_l = self.cfg.n_kv_heads // self.tp        # KV heads per shard
@@ -783,7 +910,12 @@ class PagedEngine:
         self.stats.pages_unique = len(self._seen_pages)
         for p in uniq:
             self.stats.pages_touched += 1
-            if self.hot.touch(int(p)):
+            # the demand-LRU model is always scored: with runahead on it
+            # is the in-run no-runahead comparator (nsb_demand_lru_hit_rate)
+            lru_hit = self.hot.touch(int(p))
+            hit = (self._tier.touch(int(p)) if self._tier is not None
+                   else lru_hit)
+            if hit:
                 self.stats.nsb_hits += 1
             else:
                 self.stats.nsb_misses += 1
@@ -793,22 +925,125 @@ class PagedEngine:
                 su = np.unique(sel0[:r_act, s * kv_l:(s + 1) * kv_l])
                 for p in su[su != NULL_PAGE]:
                     self.hot_shards.touch(int(p), s)
+                    if self.tier_shards is not None:
+                        self.tier_shards.touch(int(p), s, install=False)
+        if self._predictor is not None:
+            # per-request history for the next prediction round (layer-0
+            # selections — the repo's traffic-proxy convention)
+            for i, req in enumerate(rows):
+                rp = np.unique(sel0[i])
+                self._predictor.observe(req.rid, rp[rp != NULL_PAGE])
 
     # -- iteration loop ------------------------------------------------------
 
     def step(self) -> int:
-        """One scheduler iteration; returns scheduled token count."""
+        """One scheduler iteration; returns scheduled token count.
+
+        With runahead on, the iteration ends with the speculative
+        stage: predict each live request's next-iteration TopK pages
+        (history for stable selections, the layer-0 proxy slice for the
+        rest), stage them into the NSB tail with one async-dispatched
+        gather, and let the *next* decode resolve through the updated
+        hot-map — the paper's decoupled runahead sub-thread, riding the
+        host-side gap while the device drains this iteration's work.
+        """
         self.now += 1
         self.stats.iterations += 1
         plan = self.scheduler.schedule(self.now)
+        if self._tier is not None:
+            # pages whose last reference dropped since the previous
+            # iteration (preemption, finish, COW release) may be
+            # re-taken and rewritten at any point: staged copies of
+            # their old content must never resolve again
+            self._tier.invalidate(self.allocator.drain_released())
         self._apply_cow_copies()
         for job in plan.prefill:
             self._run_prefill(job)
         if plan.decode:
             self._run_decode(plan.decode, plan.decode_bucket)
             self.stats.steps += 1
+        if self._tier is not None and plan.runahead_budget > 0:
+            self._run_runahead(plan)
         self.stats.preemptions = self.scheduler.n_preemptions
         return plan.n_tokens
+
+    def _run_runahead(self, plan) -> None:
+        """The between-steps runahead stage: predict, filter, stage.
+
+        Candidates are every request decoding next iteration — the
+        rows just decoded plus requests that completed prefill this
+        iteration (whose first decode selection is exactly what a
+        demand-installed NSB always cold-misses).  The DARE-style
+        filter routes stable selections to their history predictor and
+        only the rest through the proxy scorer; staged pages land in
+        the pool tail via one fixed-shape donated gather.  Everything
+        here is speculative: it steers where bytes are *read from*
+        next iteration, never what is computed.
+        """
+        tier, pred = self._tier, self._predictor
+        cands = [r for r in plan.decode if not r.done]
+        seen = {r.rid for r in cands}
+        for job in plan.prefill:
+            req = job.req
+            if (not req.done and req.rid not in seen
+                    and req.computed >= req.prompt_len
+                    and req.rid in self.allocator._tables):
+                cands.append(req)
+                seen.add(req.rid)
+        if not cands:
+            return
+        covered, proxy = pred.split([r.rid for r in cands])
+        tier.stats.filtered_rows += len(covered)
+        pages: list = []
+        for rid in covered:
+            pages.extend(pred.history(rid))
+        if proxy and self._proxy is not None:
+            pages.extend(self._predict_proxy(
+                [self.requests[rid] for rid in proxy]))
+        copies = tier.stage(pages, max_copies=plan.runahead_budget)
+        if not copies:
+            return
+        # fixed-shape staging gather: pad with (0, 0) — a self-copy of
+        # the reserved scratch page, value-identical — so the jit
+        # compiles once for any copy count
+        src = np.zeros((max(1, self.runahead_pages),), dtype=np.int32)
+        dst = np.zeros((max(1, self.runahead_pages),), dtype=np.int32)
+        for j, (s, slot) in enumerate(copies):
+            src[j] = s
+            dst[j] = self.n_pages + slot
+        self.k_pool, self.v_pool = self._stage(
+            self.k_pool, self.v_pool, jnp.asarray(src), jnp.asarray(dst))
+        tier.stats.stage_calls += 1
+
+    def _predict_proxy(self, reqs: list) -> list:
+        """Run the layer-0 proxy scorer over ``reqs`` and return their
+        predicted next-step physical pages (padded rows and NULL-page
+        selections filtered out)."""
+        tier = self._tier
+        tier.stats.proxy_rows += len(reqs)
+        out: list = []
+        mb = self.max_batch
+        for i0 in range(0, len(reqs), mb):
+            grp = reqs[i0:i0 + mb]
+            rb = (scheduler_mod.bucket_for(len(grp), self.row_buckets)
+                  if self.row_buckets else mb)
+            token = np.zeros((rb,), dtype=np.int32)
+            pos = np.zeros((rb,), dtype=np.int32)
+            bts = np.zeros((rb, self.n_logical), dtype=np.int32)
+            nv = np.ones((rb,), dtype=np.int32)
+            for i, req in enumerate(grp):
+                token[i] = req.seq[req.computed]
+                pos[i] = req.computed
+                bts[i] = self.allocator.table_array(req.rid,
+                                                    self.n_logical)
+                nv[i] = pos[i] // self.page + 1
+            phys = np.asarray(self._proxy(
+                self.params, self.s_pool, jnp.asarray(token),
+                jnp.asarray(pos), jnp.asarray(bts), jnp.asarray(nv)))
+            for i in range(len(grp)):
+                u = np.unique(phys[i])
+                out.extend(int(p) for p in u if p != NULL_PAGE)
+        return out
 
     def run(self, workload=None, max_iters: int = 100000) -> dict:
         """Drive ``workload`` (iterable of (tick, prompt, max_new)) to
@@ -888,4 +1123,23 @@ class PagedEngine:
             roll = self.hot_shards.rollup()
             out["nsb_shard_hit_rates"] = roll["per_shard"]
             out["nsb_shard_rollup_hit_rate"] = roll["hit_rate"]
+        out["runahead_mode"] = self.runahead
+        if self._tier is not None:
+            t = self._tier
+            out["nsb_staging_slots"] = self.nsb_slots
+            out["runahead_staged_pages"] = t.stats.staged_pages
+            out["runahead_stage_calls"] = t.stats.stage_calls
+            out["runahead_invalidations"] = t.stats.invalidations
+            out["runahead_proxy_rows"] = t.stats.proxy_rows
+            out["runahead_filtered_rows"] = t.stats.filtered_rows
+            out["runahead_accuracy"] = t.accuracy
+            out["runahead_coverage"] = t.coverage
+            out["runahead_overfetch"] = t.overfetch
+            # the same demand traffic scored against a demand-install
+            # LRU NSB of the same class: the in-run baseline the
+            # runahead hit rate (nsb_hot_hit_rate above) is lifted over
+            out["nsb_demand_lru_hit_rate"] = self.hot.hit_rate
+            if self.tier_shards is not None:
+                out["runahead_shard_hit_rates"] = \
+                    self.tier_shards.hit_rates()
         return out

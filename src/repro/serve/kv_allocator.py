@@ -95,6 +95,11 @@ class KVBlockAllocator:
         # register_prefix resumes here instead of re-hashing the prompt
         self._reg_state: dict[int, tuple[int, int]] = {}
         self._pending_copies: list[tuple[int, int]] = []
+        # pages whose last live reference dropped since the previous
+        # drain_released(): the runahead hot tier invalidates these —
+        # a freed page can be re-taken and rewritten, so a staged copy
+        # of its old content must never resolve again
+        self._released: list[int] = []
         self.stats = AllocatorStats()
 
     # -- capacity ------------------------------------------------------------
@@ -155,6 +160,7 @@ class KVBlockAllocator:
         if self._ref[page]:
             return
         del self._ref[page]
+        self._released.append(page)
         if page in self._page_key:
             # content survives for future prefix attaches, LRU order
             self._cached[page] = None
@@ -283,6 +289,18 @@ class KVBlockAllocator:
         prefill/decode that reads the destination pages."""
         out = self._pending_copies
         self._pending_copies = []
+        return out
+
+    def drain_released(self) -> list[int]:
+        """Pages whose last live reference dropped since the previous
+        call.  The runahead tier invalidates these before the next
+        decode: once released a page may be re-taken and rewritten
+        (directly from ``_free``, or evicted out of ``_cached``), and a
+        staged copy of the old content must not survive that.  Cached
+        pages that get re-attached later are re-staged on demand —
+        conservatively losing a hit, never correctness."""
+        out = self._released
+        self._released = []
         return out
 
     # -- the prefix index ----------------------------------------------------

@@ -128,6 +128,7 @@ class IterationPlan:
     decode: list = field(default_factory=list)      # [Request]
     prefill: list = field(default_factory=list)     # [PrefillJob]
     decode_bucket: int = 0    # padded decode rows (0 = engine default)
+    runahead_budget: int = 0  # staging copies granted this iteration
 
     @property
     def n_tokens(self) -> int:
@@ -207,12 +208,16 @@ class Scheduler:
     def __init__(self, allocator: KVBlockAllocator, max_batch: int = 8,
                  chunk: int = 16, token_budget: int = 32,
                  max_running: int = 0,
-                 row_buckets: tuple[int, ...] = ()) -> None:
+                 row_buckets: tuple[int, ...] = (),
+                 runahead_pages: int = 0) -> None:
         self.allocator = allocator
         self.max_batch = max_batch
         self.chunk = chunk
         self.token_budget = max(token_budget, 1)
         self.max_running = max_running or max_batch
+        # staging copies the runahead stage may issue per iteration;
+        # 0 disables (the plan then never grants a budget)
+        self.runahead_pages = runahead_pages
         # bucket-aware planning: when the engine pads decode batches to
         # power-of-two buckets, the padded slots cost the same jitted
         # call whether they carry NULL rows or real requests — so the
@@ -341,6 +346,13 @@ class Scheduler:
             self._fill_bucket(plan)
             plan.decode_bucket = bucket_for(len(plan.decode),
                                             self.row_buckets)
+        # runahead staging budget: full when the iteration is pure
+        # decode (staging DMAs overlap device compute for free), halved
+        # when prefill chunks share the iteration's memory bandwidth,
+        # zero when there is nothing decoding to predict for
+        if self.runahead_pages > 0 and plan.decode:
+            plan.runahead_budget = (self.runahead_pages if not plan.prefill
+                                    else max(1, self.runahead_pages // 2))
         return plan
 
     def _fill_bucket(self, plan: IterationPlan) -> None:

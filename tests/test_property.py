@@ -13,6 +13,7 @@ from repro.kernels import coalesce_indices, ops
 from repro.models import layers
 from repro.optim import compress
 from repro.serve.kv_allocator import NULL_PAGE, KVBlockAllocator
+from repro.serve.runahead import NSBHotTier
 from repro.serve.scheduler import (Request, RequestState, Scheduler,
                                    row_buckets)
 
@@ -107,6 +108,85 @@ def test_kv_allocator_refcount_invariants(ops_list, n_pages):
         al.free_request(rid)
     _alloc_invariants(al)
     assert al.pages_in_use == 0
+
+
+_tier_op = st.one_of(
+    st.tuples(st.just("stage"),
+              st.lists(st.integers(-1, 20), min_size=1, max_size=6),
+              st.integers(0, 4)),
+    st.tuples(st.just("invalidate"),
+              st.lists(st.integers(-1, 20), min_size=1, max_size=6),
+              st.just(0)),
+    st.tuples(st.just("touch"), st.integers(1, 20), st.just(0)),
+)
+
+
+@SET
+@given(st.lists(_tier_op, min_size=1, max_size=80),
+       st.integers(8, 20),                     # demand region pages
+       st.integers(1, 6))                      # staging slots
+def test_nsb_hot_tier_never_resolves_stale_pages(ops_list, n_demand,
+                                                 n_slots):
+    """Random stage/invalidate/touch sequences through the runahead hot
+    tier: the soundness contract is that the hot-map never resolves a
+    page after it was invalidated (rewritten or freed demand copy) or
+    FIFO-evicted for slot reuse — resolving a stale slot would gather
+    dead NSB bytes into attention.  Also: slot bijection (each live slot
+    maps one page and back), NULL/out-of-range ids never staged, the
+    free-list + live slots conserve capacity, and the PageCache
+    accounting twin never diverges (touch() asserts parity itself)."""
+    tier = NSBHotTier(n_demand, n_slots)
+    staged: dict = {}                          # page -> generation staged
+    dropped: set = set()                       # pages explicitly dropped
+    for kind, arg, budget in ops_list:
+        if kind == "stage":
+            copies = tier.stage(arg, max_copies=budget)
+            assert len(copies) <= budget
+            for p, slot in copies:
+                assert 0 < p < n_demand        # NULL / out-of-range barred
+                assert 0 <= slot < n_slots
+                staged[p] = True
+                dropped.discard(p)
+            # one unordered scatter performs the call's copies: a page
+            # never earns two copies and a slot is never written twice
+            # (duplicate dst would leave the bytes/hot-map agreement to
+            # scatter ordering)
+            assert len({p for p, _ in copies}) == len(copies)
+            assert len({s for _, s in copies}) == len(copies)
+        elif kind == "invalidate":
+            tier.invalidate(arg)
+            for p in arg:
+                if staged.pop(int(p), None):
+                    dropped.add(int(p))
+        else:
+            hit = tier.touch(arg)              # twin-parity asserts inside
+            assert hit == (arg in staged)
+        # FIFO eviction may have dropped old pages to recycle slots:
+        # reconcile our model against the tier's authoritative order
+        evicted = [p for p in staged if tier.resolve(p) < 0]
+        for p in evicted:
+            staged.pop(p)
+            dropped.add(p)
+        # -- invariants
+        hot = tier.hot_map()
+        assert tier.n_staged == len(staged) <= n_slots
+        for p in staged:
+            slot = tier.resolve(p)
+            assert slot >= 0 and hot[p] == slot
+            assert tier._page_of[slot] == p    # slot bijection
+        for p in dropped:
+            if p not in staged:                # not re-staged since
+                assert tier.resolve(p) < 0
+                assert not (0 <= p < n_demand) or hot[p] < 0
+        live_slots = {tier.resolve(p) for p in staged}
+        assert len(live_slots) == len(staged)  # no slot double-booked
+        assert live_slots.isdisjoint(tier._free)
+        assert len(live_slots) + len(tier._free) == n_slots
+        # hot-map and staged set agree everywhere, not just at live pages
+        assert {int(p) for p in np.flatnonzero(hot >= 0)} == set(staged)
+    assert tier.stats.staged_pages >= len(staged)
+    if tier.model.stats.hits + tier.model.stats.misses:
+        assert 0.0 <= tier.hit_rate <= 1.0
 
 
 @SET

@@ -192,14 +192,17 @@ class TestPercentile:
                                        method="inverted_cdf"))
             assert percentile(xs, q) == want, (n, q)
 
-    def test_always_an_order_statistic_and_nan_on_empty(self):
+    def test_always_an_order_statistic_and_none_on_empty(self):
+        """Zero traffic has no order statistics: the old NaN sentinel
+        poisoned JSON artifacts (NaN is not valid JSON) and every
+        ``{v:.0f}`` report format; None is the explicit absence."""
         from repro.serve.engine import percentile
 
         rng = np.random.default_rng(1)
         xs = list(rng.normal(size=17))
         for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
             assert percentile(xs, q) in xs
-        assert math.isnan(percentile([], 0.5))
+        assert percentile([], 0.5) is None
 
 
 class TestServeStatsBytes:
@@ -214,12 +217,16 @@ class TestServeStatsBytes:
         assert s.demand_bytes == 4 * 256
         assert s.offchip_reduction == (3 * 256) / (4 * 256)
 
-    def test_nan_without_row_bytes_or_traffic(self):
+    def test_none_without_row_bytes_or_traffic(self):
+        """No traffic (or no byte size) -> the ratios are undefined:
+        None, not NaN — NaN leaked into JSON artifacts and crashed
+        format specs in the launcher's report."""
         from repro.serve.engine import ServeStats
 
-        assert math.isnan(ServeStats(nsb_hits=3, nsb_misses=1)
-                          .offchip_reduction)
-        assert math.isnan(ServeStats(row_bytes=64).offchip_reduction)
+        assert ServeStats(nsb_hits=3, nsb_misses=1).offchip_reduction \
+            is None
+        assert ServeStats(row_bytes=64).offchip_reduction is None
+        assert ServeStats().hot_hit_rate is None
 
 
 def _mk(rid, plen, gen, arrival=0.0):
@@ -768,3 +775,101 @@ class TestStepLoopFastPath:
             a, b = base.requests[rid], eng.requests[rid]
             assert a.out_tokens == b.out_tokens
             assert np.array_equal(a.last_logits, b.last_logits)
+
+
+@pytest.mark.slow
+class TestRunahead:
+    """Acceptance for the online runahead stage: speculation is *free* of
+    correctness — every request's tokens and logits are bitwise-identical
+    with runahead off / imp / nvr, under allocator pressure (forced
+    preemption + resume) and under COW shared-prefix attaches — and the
+    staged tier actually moves: pages staged, demand hits observed,
+    accuracy/coverage reported."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import api
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(11)
+        # shared-prefix multi-tenant shape: 2 system prompts of 3 whole
+        # pages each (kv_page=4), short user suffixes
+        sys_prompts = [rng.integers(1, cfg.vocab, size=12) for _ in range(2)]
+        work = []
+        for i in range(6):
+            suffix = rng.integers(1, cfg.vocab, size=int(rng.integers(2, 6)))
+            work.append((float(i) * 0.5,
+                         np.concatenate([sys_prompts[i % 2], suffix]), 5))
+        return cfg, params, work
+
+    def _run(self, cfg, params, work, n_pages=0, runahead="off",
+             prefix_cache=True):
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
+                          max_batch=4, chunk=8, nsb_pages=32,
+                          prefix_cache=prefix_cache, runahead=runahead,
+                          runahead_pages=8)
+        eng.run([(t, p.copy(), g) for t, p, g in work])
+        return eng
+
+    def _assert_bitwise(self, a_eng, b_eng, why):
+        for rid in a_eng.requests:
+            a, b = a_eng.requests[rid], b_eng.requests[rid]
+            assert a.out_tokens == b.out_tokens, (why, rid)
+            assert np.array_equal(a.last_logits, b.last_logits), (why, rid)
+
+    def test_bitwise_identical_across_modes(self, setup):
+        cfg, params, work = setup
+        base = self._run(cfg, params, work)
+        for mode in ("imp", "nvr"):
+            eng = self._run(cfg, params, work, runahead=mode)
+            self._assert_bitwise(base, eng, mode)
+            m = eng.metrics()
+            assert m["runahead_mode"] == mode
+            assert m["runahead_staged_pages"] > 0
+            assert eng.stats.nsb_hits > 0
+            # staged-tier accounting live: both axes defined post-traffic
+            assert 0.0 <= m["runahead_accuracy"] <= 1.0
+            assert 0.0 <= m["runahead_coverage"] <= 1.0
+            assert m["runahead_overfetch"] == pytest.approx(
+                1.0 - m["runahead_accuracy"])
+            # comparator LRU sees the identical demand stream
+            assert (m["nsb_demand_lru_hit_rate"]
+                    == base.metrics()["nsb_hot_hit_rate"])
+
+    def test_bitwise_under_forced_preemption_and_resume(self, setup):
+        """Freed pages (preempt evictions) must be invalidated out of the
+        hot tier before their physical slots are re-allocated; resume
+        recompute must still replay bit-for-bit with staging active."""
+        cfg, params, work = setup
+        calm = self._run(cfg, params, work)
+        tight = self._run(cfg, params, work, n_pages=1 + 11,
+                          runahead="nvr")
+        assert tight.scheduler.n_preemptions > 0
+        self._assert_bitwise(calm, tight, "preempt+runahead")
+        assert tight.metrics()["runahead_invalidations"] > 0
+
+    def test_bitwise_with_cow_shared_prefix_attaches(self, setup):
+        """COW dst pages are rewritten by the pool copy: stale staged
+        entries must drop, and cached-attach runs must match the
+        uncached run bit-for-bit with runahead on."""
+        cfg, params, work = setup
+        base = self._run(cfg, params, work, prefix_cache=False)
+        cow = self._run(cfg, params, work, runahead="nvr")
+        assert cow.allocator.stats.prefix_hits > 0
+        self._assert_bitwise(base, cow, "cow+runahead")
+
+    def test_off_engine_has_no_tier(self, setup):
+        cfg, params, work = setup
+        eng = self._run(cfg, params, work)
+        assert eng._tier is None and eng._predictor is None
+        m = eng.metrics()
+        assert m["runahead_mode"] == "off"
+        assert "runahead_staged_pages" not in m
+        # the demand pools carry no staging tail when runahead is off
+        assert eng.k_pool.shape[1] == eng.n_pages

@@ -93,10 +93,12 @@ for i in range(6):
     work.append((float(i) * 0.5,
                  np.concatenate([sys_prompts[i % 2], sfx]), 5))
 
-def run(mesh=None, n_pages=0, kernel="xla", capture=False):
+def run(mesh=None, n_pages=0, kernel="xla", capture=False,
+        runahead="off"):
     eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
                       max_batch=4, chunk=8, nsb_pages=32, mesh=mesh,
-                      kernel=kernel, capture_trace=capture)
+                      kernel=kernel, capture_trace=capture,
+                      runahead=runahead, runahead_pages=8)
     eng.run([(t, p.copy(), g) for t, p, g in work])
     return eng
 
@@ -232,6 +234,46 @@ print("TP4_OK")
     r = run_py(code, n_dev=4)
     assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
     assert "TP4_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_tp2_runahead_bitwise_and_staged_tail_sharded():
+    """Online runahead composes with tensor parallelism: the staged NSB
+    tail rides the KV-head-sharded pools (1/tp of the head dim per
+    device, page axis never sharded), the hot-map remap replays inside
+    the sharded decode, and tokens/logits stay bitwise-identical to the
+    unsharded runahead-off engine — including across a forced
+    preemption/resume with staging active."""
+    code = _COMMON + """
+base = run()                                   # tp=1, runahead off
+mesh = make_serve_mesh(2)
+tp2 = run(mesh=mesh, runahead="nvr")
+assert_bitwise(base, tp2)
+
+# the staging tail extends the *page* axis of the sharded pools: each
+# shard still holds half the KV-head dim, over demand + staged pages
+shards = tp2.k_pool.addressable_shards
+assert len(shards) == 2
+assert tp2.k_pool.shape[1] == tp2.n_pages + tp2.nsb_slots
+assert [s.data.shape[3] for s in shards] == [cfg.n_kv_heads // 2] * 2
+
+m = tp2.metrics()
+assert m["runahead_staged_pages"] > 0
+# per-shard staged-tier mirrors: one rate per shard, rollup defined
+assert len(m["runahead_shard_hit_rates"]) == 2
+assert all(r is None or 0.0 <= r <= 1.0
+           for r in m["runahead_shard_hit_rates"])
+
+# forced preemption under sharding + staging resumes bitwise
+tight = run(mesh=mesh, n_pages=1 + 9, runahead="nvr")
+assert tight.scheduler.n_preemptions > 0
+assert_bitwise(base, tight)
+assert tight.metrics()["runahead_invalidations"] > 0
+print("TP2_RUNAHEAD_OK")
+"""
+    r = run_py(code, n_dev=2)
+    assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
+    assert "TP2_RUNAHEAD_OK" in r.stdout
 
 
 @pytest.mark.slow
