@@ -1,0 +1,186 @@
+"""Bench regression gate: current ``BENCH_<name>.json`` vs committed
+baselines.
+
+CI's slow job runs the bench smoke at ``BENCH_SCALE=0.25``, then runs
+this checker over the artifacts in ``benchmarks/results/`` against the
+baselines committed under ``benchmarks/baselines/``.  Only metrics
+listed in :data:`GATES` are compared — deterministic quantities
+(iteration counts, hit rates, scheduler-tick latencies, improvement
+ratios), never wall-clock throughput, which is hostile to shared CI
+runners.  A gated metric that moves more than ``--threshold`` (default
+15%) in its bad direction fails the job.
+
+Baselines are only comparable at the scale they were recorded at: a
+results file whose ``bench_scale`` differs from its baseline's is
+skipped with a warning (local runs default to ``BENCH_SCALE=0.5``).
+
+To accept an intentional perf change, re-record and commit:
+
+    PYTHONPATH=src BENCH_SCALE=0.25 python -m benchmarks.run <benches>
+    python -m benchmarks.check_regressions --update-baselines
+    git add benchmarks/baselines/
+
+See benchmarks/README.md for the artifact schema and the gate table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "results")
+BASELINES = os.path.join(HERE, "baselines")
+
+# bench -> {headline metric: direction in which BIGGER is BETTER
+# ("higher") or SMALLER is BETTER ("lower")}.  Deterministic metrics
+# only: seeds are fixed, so these reproduce bit-for-bit per scale.
+GATES: dict[str, dict[str, str]] = {
+    "engine_speedup": {
+        "parity_ok": "higher",                       # 1.0 = bit-exact
+    },
+    "capture_roundtrip": {
+        "serve_nsb_hot_hit_rate": "higher",
+        "serve_nvr_miss_reduction": "higher",
+        "moe_nvr_miss_reduction": "higher",
+    },
+    "serve_bench": {
+        "mean_latency_speedup_x": "higher",
+        "p50_latency_iters": "lower",
+        "nsb_hot_hit_rate": "higher",
+    },
+    "prefix_bench": {
+        "prefill_token_savings_pct": "higher",
+        "cached_page_hit_rate": "higher",
+        "p50_ttft_shared": "lower",
+    },
+    "paged_kernel_bench": {
+        "decode_rows_padded_post": "lower",
+        "n_decode_traces_post": "lower",
+        "pool_copy_mib_eliminated": "higher",
+    },
+    "runahead_bench": {
+        "nsb_hit_rate_nvr": "higher",
+        "nsb_hit_rate_lift_nvr_vs_off": "higher",
+        "runahead_accuracy_nvr": "higher",
+        "modeled_stall_cycles_per_tok_nvr": "lower",
+        "modeled_tok_throughput_gain_nvr_vs_off": "higher",
+    },
+    "spill_bench": {
+        "resume_ttft_improvement_x": "higher",
+        "p50_resume_ttft_swap": "lower",
+        "p99_resume_ttft_swap": "lower",
+        "iterations_swap": "lower",
+        "fetch_backs_swap_ra": "higher",
+        "int8_dequant_error_bound": "lower",
+    },
+}
+
+
+def _load(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_bench(name: str, threshold: float,
+                results_dir: str = RESULTS,
+                baselines_dir: str = BASELINES) -> list[str]:
+    """Compare one bench's artifact against its baseline; returns a list
+    of failure messages (empty = clean)."""
+    fname = f"BENCH_{name}.json"
+    cur = _load(os.path.join(results_dir, fname))
+    base = _load(os.path.join(baselines_dir, fname))
+    if cur is None:
+        return [f"{name}: no results artifact ({fname}) — did the "
+                f"bench run?"]
+    if base is None:
+        return [f"{name}: no committed baseline — record one with "
+                f"--update-baselines and commit benchmarks/baselines/"]
+    if cur.get("bench_scale") != base.get("bench_scale"):
+        print(f"  {name}: SKIP (scale {cur.get('bench_scale')} != "
+              f"baseline scale {base.get('bench_scale')})")
+        return []
+    failures = []
+    ch, bh = cur.get("headline", {}), base.get("headline", {})
+    for metric, direction in GATES[name].items():
+        if metric not in bh or bh[metric] is None:
+            print(f"  {name}.{metric}: WARN no baseline value "
+                  f"(new metric?)")
+            continue
+        if metric not in ch or ch[metric] is None:
+            failures.append(f"{name}.{metric}: missing from current "
+                            f"results (gated metric removed?)")
+            continue
+        b, c = float(bh[metric]), float(ch[metric])
+        bad = (b - c) if direction == "higher" else (c - b)
+        rel = bad / max(abs(b), 1e-12)
+        status = "OK"
+        if rel > threshold:
+            status = "FAIL"
+            failures.append(
+                f"{name}.{metric}: {b:.6g} -> {c:.6g} "
+                f"({rel:+.1%} worse, limit {threshold:.0%}, "
+                f"{direction} is better)")
+        print(f"  {name}.{metric}: {b:.6g} -> {c:.6g}  [{status}]")
+    return failures
+
+
+def update_baselines(names, results_dir: str = RESULTS,
+                     baselines_dir: str = BASELINES) -> int:
+    os.makedirs(baselines_dir, exist_ok=True)
+    copied = 0
+    for name in names:
+        src = os.path.join(results_dir, f"BENCH_{name}.json")
+        if not os.path.exists(src):
+            print(f"  {name}: no results artifact, skipped")
+            continue
+        shutil.copy(src, os.path.join(baselines_dir,
+                                      f"BENCH_{name}.json"))
+        print(f"  {name}: baseline updated")
+        copied += 1
+    print(f"{copied} baseline(s) written to {baselines_dir} — "
+          f"commit them.")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate BENCH_<name>.json headlines against "
+                    "committed baselines")
+    ap.add_argument("benches", nargs="*",
+                    help=f"benches to check (default: all gated: "
+                         f"{', '.join(GATES)})")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated relative regression "
+                         "(default 0.15)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy current results over the committed "
+                         "baselines instead of checking")
+    args = ap.parse_args(argv)
+    names = args.benches or list(GATES)
+    unknown = [n for n in names if n not in GATES]
+    if unknown:
+        print(f"no gate defined for: {', '.join(unknown)}\n"
+              f"gated benches: {', '.join(GATES)}", file=sys.stderr)
+        return 2
+    if args.update_baselines:
+        return update_baselines(names)
+    failures = []
+    for name in names:
+        failures.extend(check_bench(name, args.threshold))
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nall gated benches within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -438,6 +438,16 @@ def runahead_bench():
     return _ra()
 
 
+def spill_bench():
+    """Host KV spill tier under pool oversubscription: preemption as
+    swap-out vs free-and-recompute, runahead fetch-back, int8 spill
+    compression — bitwise token/logit parity recompute=swap=swap+ra and
+    resume-TTFT improvement asserted in-run (defined in
+    benchmarks/serve_bench.py; lazy import as above)."""
+    from .serve_bench import spill_bench as _sp
+    return _sp()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -454,4 +464,5 @@ ALL = {
     "paged_kernel_bench": paged_kernel_bench,  # donated+bucketed decode
     "tp_serve_bench": tp_serve_bench,  # KV-head-sharded TP serving
     "runahead_bench": runahead_bench,  # online runahead off/imp/nvr
+    "spill_bench": spill_bench,        # host spill swap vs recompute
 }

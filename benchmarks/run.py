@@ -11,7 +11,7 @@ the headline metrics (non-finite values nulled, keys sorted), the
 BENCH_SCALE it ran at, the git sha and the harness wall time — one
 stable file per bench that CI uploads and successive commits can diff.
 
-Beyond the paper figures, seven engineering benches ride along:
+Beyond the paper figures, eight engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -29,6 +29,13 @@ Beyond the paper figures, seven engineering benches ride along:
   runahead_bench    — online vector runahead off/imp/nvr on shared-prefix
                       Poisson serving: bitwise parity across modes, NSB
                       hit-rate lift + modeled stall gain asserted in-run
+  spill_bench       — host KV spill tier under pool oversubscription:
+                      preemption as swap-out vs free-and-recompute (+
+                      runahead fetch-back, int8 spill), bitwise parity
+                      and resume-TTFT improvement asserted in-run
+
+CI gates the deterministic headline metrics against committed baselines
+(benchmarks/check_regressions.py; see benchmarks/README.md).
 
 Exit status: 0 only if every requested benchmark ran clean; a benchmark
 that raises is reported (traceback + summary line) and the process exits

@@ -35,6 +35,14 @@ cross-tp parity of every request's tokens and logits asserted in-run,
 pool donation asserted under sharding, and per-shard NSB hit rates.
 The sharded levels need forced host devices on CPU.
 
+A fifth, ``spill_bench``, oversubscribes the HBM pool (aggregate demand
+pages far beyond ``n_pages``) so the scheduler must preempt, and
+compares the recompute eviction policy against the host spill tier
+(swap-out/swap-in, optionally with runahead fetch-back): tokens asserted
+bitwise-identical across policies in-run, resume-TTFT (re-admission to
+next new token, in iterations) and tokens/s per policy, swap traffic and
+the int8-tier dequantisation error bound reported.
+
 A fourth, ``runahead_bench``, serves the shared-prefix Poisson load
 through the online-runahead engine at runahead off / imp / nvr: token
 streams and logits asserted bitwise-identical across modes in-run, NSB
@@ -551,10 +559,147 @@ def runahead_bench():
     return rows, headline
 
 
+def _run_spill_mode(cfg, params, workload, n_pages: int,
+                    spill: int, compress: bool = False,
+                    runahead: str = "off"):
+    from repro.serve.engine import PagedEngine
+
+    eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
+                      max_batch=8, chunk=8, nsb_pages=16,
+                      runahead=runahead, runahead_pages=16,
+                      spill_pages=spill, spill_compress=compress)
+    t0 = time.perf_counter()
+    eng.run([(t, p.copy(), g) for t, p, g in workload])
+    wall = time.perf_counter() - t0
+    eng.allocator.check_tier_invariants()
+    return eng, wall
+
+
+def spill_bench():
+    """Registered in benchmarks.run as ``spill_bench``: swap, don't
+    recompute — the host KV spill tier under pool oversubscription.
+
+    The same Poisson workload runs through a deliberately undersized
+    HBM pool (aggregate demand pages are several times ``n_pages``, so
+    the scheduler *must* preempt) under four policies:
+
+    * ``recompute`` — the historic baseline: eviction frees pages and
+      resume re-prefills + replays (spill tier off);
+    * ``swap`` — eviction snapshots pages to the host spill pool and
+      resume restores them (no re-prefill, no replay);
+    * ``swap+ra`` — swap plus the nvr runahead stage, whose fetch-back
+      swap-resumes the spilled queue head in the between-steps window
+      and pre-stages its history pages host->HBM->NSB;
+    * ``swap-int8`` — swap with the spilled K/V planes int8-compressed
+      (per-page scales via ``optim.compress``; summaries exact).
+
+    Asserted in-run: every request's tokens and logits are
+    **bitwise-identical** between recompute and the uncompressed swap
+    tiers (swap restores identical content in identical logical order;
+    selection and attention address pages through the block table, so
+    physical renaming cannot change a logit), at least one swap-out
+    actually happened (the workload genuinely oversubscribes), and
+    swap's p50 resume-TTFT (re-admission to next new token) beats
+    recompute's.  The int8 tier reports its measured worst-case
+    dequantisation error bound instead of a bitwise claim.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.nvr.engine.sweep import write_artifacts
+    from repro.models import api
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = max(12, int(24 * SCALE))
+    workload = _workload(cfg, n_req)
+    # oversubscription: every batch slot wants up to 9 pages
+    # (prompt<=24 + gen<=10 at page=4) but the pool holds 12 demand
+    # pages total — far below max_batch * 9 aggregate demand
+    n_pages = 13
+    demand_pages = sum(-(-(len(p) + g) // cfg.kv_page)
+                       for _, p, g in workload)
+    assert demand_pages > 2 * (n_pages - 1), \
+        "workload does not oversubscribe the pool"
+
+    runs = {
+        "recompute": _run_spill_mode(cfg, params, workload, n_pages, 0),
+        "swap": _run_spill_mode(cfg, params, workload, n_pages, 64),
+        "swap+ra": _run_spill_mode(cfg, params, workload, n_pages, 64,
+                                   runahead="nvr"),
+        "swap-int8": _run_spill_mode(cfg, params, workload, n_pages, 64,
+                                     compress=True),
+    }
+
+    base = runs["recompute"][0]
+    for mode in ("swap", "swap+ra"):
+        eng = runs[mode][0]
+        for rid in base.requests:
+            a, b = base.requests[rid], eng.requests[rid]
+            assert a.out_tokens == b.out_tokens, \
+                f"rid {rid} tokens diverged under {mode}"
+            assert np.array_equal(a.last_logits, b.last_logits), \
+                f"rid {rid} logits diverged under {mode}"
+
+    rows = []
+    headline = {"n_requests": float(n_req),
+                "hbm_pool_pages": float(n_pages - 1),
+                "workload_demand_pages": float(demand_pages),
+                "bitwise_parity_modes": "recompute=swap=swap+ra"}
+    for mode, (eng, wall) in runs.items():
+        m = eng.metrics()
+        gaps = [g for r in eng.requests.values() for g in r.resume_gaps]
+        tag = mode.replace("+", "_").replace("-", "_")
+        headline[f"p50_resume_ttft_{tag}"] = m["p50_resume_ttft"]
+        headline[f"p99_resume_ttft_{tag}"] = m["p99_resume_ttft"]
+        headline[f"iterations_{tag}"] = float(m["iterations"])
+        headline[f"tok_per_s_wall_{tag}"] = m["tokens_out"] / wall
+        rows.append((
+            mode, m["preemptions"], m.get("swap_outs", 0),
+            m.get("swap_ins", 0), m.get("fetch_backs", 0),
+            m.get("spill_fallbacks", 0), len(gaps),
+            "" if m["p50_resume_ttft"] is None
+            else f"{m['p50_resume_ttft']:.0f}",
+            "" if m["p99_resume_ttft"] is None
+            else f"{m['p99_resume_ttft']:.0f}",
+            m["iterations"], m["tokens_out"],
+            f"{m['tokens_out'] / wall:.1f}",
+            f"{m.get('spill_dequant_error_bound', 0.0):.3e}"))
+
+    m_swap = runs["swap"][0].metrics()
+    assert m_swap["swap_outs"] > 0, \
+        "no swap-out happened: the bench is not oversubscribed"
+    assert m_swap["n_resumes"] > 0, "no resume was measured"
+    assert headline["p50_resume_ttft_recompute"] is not None \
+        and headline["p50_resume_ttft_swap"] is not None
+    imp = (headline["p50_resume_ttft_recompute"]
+           / max(1e-9, headline["p50_resume_ttft_swap"]))
+    headline["resume_ttft_improvement_x"] = imp
+    assert imp > 1.0, \
+        f"swap resume-TTFT not better than recompute ({imp:.2f}x)"
+    headline["int8_dequant_error_bound"] = \
+        runs["swap-int8"][0].metrics()["spill_dequant_error_bound"]
+    headline["fetch_backs_swap_ra"] = \
+        float(runs["swap+ra"][0].metrics()["fetch_backs"])
+    headline["paper"] = (
+        "off-chip latency hiding with real latency: three-level "
+        "NSB/HBM/host hierarchy, preemption as swap-out, runahead "
+        "fetch-back ahead of demand (DARE tolerance of irregular "
+        "misses; SparCE skip-don't-recompute)")
+    write_artifacts(
+        "spill_bench",
+        "mode,preemptions,swap_outs,swap_ins,fetch_backs,"
+        "recompute_fallbacks,n_resumes,p50_resume_ttft,p99_resume_ttft,"
+        "iterations,tokens_out,tok_per_s_wall,int8_err_bound",
+        rows, RESULTS, scale=SCALE)
+    return rows, headline
+
+
 def main() -> None:
     for name, fn in (("serve_bench", serve_bench),
                      ("prefix_bench", prefix_bench),
                      ("runahead_bench", runahead_bench),
+                     ("spill_bench", spill_bench),
                      ("tp_serve_bench", tp_serve_bench)):
         rows, headline = fn()
         print(f"{name}: {len(rows)} requests")

@@ -32,6 +32,13 @@ from .machine import Cache, LINE_BYTES, _E_PF
 from .trace import Trace, TraceBuilder
 from .traces import MAC_RATE, PC_IDX, _row_gather, _stream_idx
 
+# memory-hierarchy tier tags for recorded page events (see
+# docs/MEMORY_HIERARCHY.md): which tier *served or received* the pages
+# of an event.  -1 = untagged (historic streams; treated as HBM demand).
+TIER_HBM = 0        # demand-pool gather (the authoritative tier)
+TIER_NSB = 1        # staged into / served from the NSB hot tail
+TIER_HOST = 2       # host spill-tier transfer (swap-out or swap-in)
+
 
 @dataclass
 class PageStream:
@@ -47,7 +54,10 @@ class PageStream:
     adds ``shards[i]``: the model shard whose KV heads produced the
     selection (-1 when serving is single-shard) — each shard owns its own
     NSB, so per-shard streams replay through per-shard hot-set models
-    (:func:`nsb_shard_rollup`).  Tags are metadata only — ``to_trace``
+    (:func:`nsb_shard_rollup`).  Memory-tier traffic adds ``tiers[i]``:
+    which hierarchy tier the event's pages moved through (``TIER_HBM``
+    demand gathers, ``TIER_NSB`` staging copies, ``TIER_HOST`` spill
+    swaps; -1 when untagged).  Tags are metadata only — ``to_trace``
     lowers events in recorded order, so a continuous-batching engine's
     interleaving is exactly what the simulator replays.
     """
@@ -60,9 +70,10 @@ class PageStream:
     rids: list = field(default_factory=list)
     steps: list = field(default_factory=list)
     shards: list = field(default_factory=list)
+    tiers: list = field(default_factory=list)
 
     def record(self, idx, *, rid: int = -1, step: int = -1,
-               shard: int = -1) -> None:
+               shard: int = -1, tier: int = -1) -> None:
         """Record one selection event (any int array-like of row ids)."""
         arr = np.asarray(idx, dtype=np.int64).reshape(-1)
         if arr.size:
@@ -70,9 +81,10 @@ class PageStream:
             self.rids.append(int(rid))
             self.steps.append(int(step))
             self.shards.append(int(shard))
+            self.tiers.append(int(tier))
 
     def record_batched(self, idx, *, rid: int = -1, step: int = -1,
-                       shard: int = -1) -> None:
+                       shard: int = -1, tier: int = -1) -> None:
         """Record ``idx[..., K]`` as one event per leading slot — e.g. a
         ``[B, KV, K]`` TopK selection becomes ``B*KV`` events.  Empty
         rows (K == 0) are skipped, matching :meth:`record` — zero-length
@@ -85,6 +97,7 @@ class PageStream:
             self.rids.append(int(rid))
             self.steps.append(int(step))
             self.shards.append(int(shard))
+            self.tiers.append(int(tier))
 
     @property
     def n_events(self) -> int:
@@ -111,19 +124,39 @@ class PageStream:
 
     def _filtered(self, suffix: str, pred) -> "PageStream":
         """A new stream over the same table holding the events where
-        ``pred(rid, shard)`` is true, all tags preserved."""
+        ``pred(rid, shard, tier)`` is true, all tags preserved."""
         sub = PageStream(name=f"{self.name}/{suffix}", n_rows=self.n_rows,
                          row_bytes=self.row_bytes,
                          compute_per_row=self.compute_per_row)
-        for ev, r, st, sh in zip(self.events, self.rids, self.steps,
-                                 self.shards):
-            if pred(r, sh):
-                sub.record(ev, rid=r, step=st, shard=sh)
+        for ev, r, st, sh, ti in zip(self.events, self.rids, self.steps,
+                                     self.shards, self.tiers):
+            if pred(r, sh, ti):
+                sub.record(ev, rid=r, step=st, shard=sh, tier=ti)
         return sub
 
     def subset(self, rid: int) -> "PageStream":
         """A single request's traffic as its own stream (same table)."""
-        return self._filtered(f"r{rid}", lambda r, sh: r == rid)
+        return self._filtered(f"r{rid}", lambda r, sh, ti: r == rid)
+
+    # -- memory-tier views ---------------------------------------------------
+
+    def tier_ids(self) -> list:
+        """Distinct tier tags in first-appearance order (without -1)."""
+        seen: dict = {}
+        for t in self.tiers:
+            if t >= 0 and t not in seen:
+                seen[t] = None
+        return list(seen)
+
+    def subset_tier(self, tier: int) -> "PageStream":
+        """One memory tier's traffic as its own stream: e.g.
+        ``subset_tier(TIER_HOST)`` isolates the spill swap transfers
+        from the demand gathers they hide behind.  Untagged events
+        (``tier == -1``, historic recorders) count as ``TIER_HBM``."""
+        return self._filtered(
+            f"tier{tier}",
+            lambda r, sh, ti: ti == tier
+            or (tier == TIER_HBM and ti < 0))
 
     # -- tensor-parallel views -----------------------------------------------
 
@@ -139,7 +172,8 @@ class PageStream:
         """One model shard's traffic as its own stream: the page
         selections its KV heads produced, in recorded order — the
         traffic that shard's private NSB sees."""
-        return self._filtered(f"shard{shard}", lambda r, sh: sh == shard)
+        return self._filtered(f"shard{shard}",
+                              lambda r, sh, ti: sh == shard)
 
     def interleave_spans(self) -> dict:
         """Per-request (first, last) positions in the recorded order —

@@ -34,6 +34,16 @@ ARCHITECTURE.md "online runahead"):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --continuous --requests 16 --shared-prefix 4 --runahead nvr
+
+Host KV spill tier — preemption under pool pressure swaps pages to a
+host pool and resume swaps them back (no re-prefill, tokens unchanged;
+--spill-compress stores the spilled K/V planes int8 with per-page
+scales).  Pair with a small --pages to oversubscribe (every request
+must still fit the pool alone: pages > (prompt_len + gen) / kv_page):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --continuous --requests 16 --prompt-len 24 --gen 8 --pages 12 \
+      --spill 64 --runahead nvr
 """
 
 from __future__ import annotations
@@ -113,7 +123,9 @@ def _run_continuous(cfg, params, args):
                       row_bucketing=not args.no_buckets,
                       mesh=mesh,
                       runahead=args.runahead,
-                      runahead_pages=args.runahead_pages)
+                      runahead_pages=args.runahead_pages,
+                      spill_pages=args.spill,
+                      spill_compress=args.spill_compress)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
@@ -143,6 +155,16 @@ def _run_continuous(cfg, params, args):
               f"{_fmt(m['runahead_coverage'])}, over-fetch "
               f"{_fmt(m['runahead_overfetch'])}; demand-LRU baseline "
               f"hit rate {_fmt(m['nsb_demand_lru_hit_rate'])}")
+    if args.spill > 0:
+        print(f"[serve-cb] spill: {m['swap_outs']} swap-outs / "
+              f"{m['swap_ins']} swap-ins ({m['swap_out_pages']} pages "
+              f"out, {m['swap_in_pages']} in, {m['fetch_backs']} "
+              f"runahead fetch-backs, {m['spill_fallbacks']} recompute "
+              f"fallbacks); host pool {m['spill_host_mib']:.2f} MiB"
+              + (f", int8 err bound "
+                 f"{m['spill_dequant_error_bound']:.2e}"
+                 if m["spill_compressed"] else "")
+              + f"; resume-TTFT p50 {_fmt(m['p50_resume_ttft'], '.0f')}")
     if not args.no_prefix_cache:
         print(f"[serve-cb] prefix cache: {m['prefix_hit_pages']} page "
               f"hits, {m['prefill_tokens_skipped']} prompt tokens "
@@ -209,6 +231,15 @@ def main(argv=None):
                         "tokens bitwise-identical either way)")
     p.add_argument("--runahead-pages", type=int, default=8,
                    help="staging copies per iteration (runahead budget)")
+    p.add_argument("--spill", type=int, default=0, metavar="SLOTS",
+                   help="host spill-tier slots (pages): preemption "
+                        "swaps KV to a host pool and resume swaps it "
+                        "back instead of re-prefilling; 0 = recompute "
+                        "policy (the historic behaviour)")
+    p.add_argument("--spill-compress", action="store_true",
+                   help="int8-compress spilled K/V planes (per-page "
+                        "scales via optim.compress; page summaries stay "
+                        "exact, so TopK selection survives bitwise)")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")

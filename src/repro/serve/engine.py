@@ -26,11 +26,21 @@ accounting (``capture.PageCache``), and the captured simulator trace
 allocator's page ids, so eviction policy, hot-set reuse, and NVR
 prefetch simulation see one memory model.
 
-Preemption uses the recompute policy, engineered for *bitwise-identical*
-resume: prompts re-prefill through the same chunk schedule, and
-already-generated tokens *replay* through the decode path (teacher
-forcing), so the same jitted functions see the same inputs and the
-request's logits are reproduced exactly.
+Preemption is engineered for *bitwise-identical* resume under either
+policy.  With a host spill tier (``spill_pages > 0``) eviction is
+**swap-out**: the victim's pages snapshot whole (K, V, and the fp32
+page summaries the TopK selection reads) into a host pool
+(:mod:`.spill`), and resume restores them onto fresh physical ids —
+identical content in identical logical order, and the paged attention
+selects and gathers through the block table, so physical renaming
+cannot change a logit.  Without the tier (or when it is full) the
+recompute policy applies: prompts re-prefill through the same chunk
+schedule, and already-generated tokens *replay* through the decode path
+(teacher forcing), so the same jitted functions see the same inputs and
+the request's logits are reproduced exactly.  The int8-compressed spill
+tier (``spill_compress=True``) trades bitwise K/V restore for ~2x fewer
+host bytes with a per-page ``scale/2`` error bound — summaries stay
+exact, so page *selection* survives even compressed swaps.
 
 With ``mesh=`` the engine is tensor-parallel: pools and QKV weights
 shard along the KV-head axis over a ``("model",)`` mesh while the page
@@ -70,7 +80,8 @@ from ..models import layers as mlayers
 from . import runahead as runahead_mod
 from . import scheduler as scheduler_mod
 from .kv_allocator import NULL_PAGE, KVBlockAllocator, PagePoolConfig
-from .scheduler import PrefillJob, Request, Scheduler
+from .scheduler import PrefillJob, Request, RequestState, Scheduler
+from .spill import HostSpillPool
 
 
 def percentile(xs, q: float) -> float | None:
@@ -245,6 +256,9 @@ class PagedServeStats(ServeStats):
     cow_page_copies: int = 0
     decode_rows_padded: int = 0     # NULL rows computed across the run
     prefill_calls: int = 0          # executed prefill-chunk jit calls
+    swap_out_pages: int = 0         # pages snapshotted device -> host
+    swap_in_pages: int = 0          # pages restored host -> device
+    fetch_backs: int = 0            # runahead-window early swap-resumes
 
 
 def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
@@ -571,7 +585,9 @@ class PagedEngine:
                  row_bucketing: bool = True,
                  mesh=None,
                  runahead: str = "off",
-                 runahead_pages: int = 8) -> None:
+                 runahead_pages: int = 8,
+                 spill_pages: int = 0,
+                 spill_compress: bool = False) -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -612,7 +628,8 @@ class PagedEngine:
         # +1 for the reserved scratch page
         self.n_pages = n_pages or (1 + max_batch * self.n_logical)
         self.allocator = KVBlockAllocator(self.n_pages, self.page,
-                                          prefix_cache=prefix_cache)
+                                          prefix_cache=prefix_cache,
+                                          spill_pages=spill_pages)
         self.kernel = kernel
         self.donate_pools = donate_pools
         self.row_buckets = (scheduler_mod.row_buckets(max_batch)
@@ -653,6 +670,15 @@ class PagedEngine:
                 dtype_bytes=kv_dtype_bytes)
         kv_dt = (jnp.int8 if cfg.kv_dtype == "int8"
                  else jnp.dtype(cfg.param_dtype))
+        # host spill tier: preemption becomes swap-out instead of
+        # free-and-recompute (slot ids allocated by the allocator, bytes
+        # owned by the pool, copies performed by _apply_spill_outs /
+        # _apply_swap_ins in the step loop)
+        self.spill_pool = (HostSpillPool(
+            spill_pages, cfg.n_layers, self.page, cfg.n_kv_heads,
+            cfg.hd, np.dtype(kv_dt), compress=spill_compress)
+            if spill_pages > 0 else None)
+        self._spill_err = 0.0       # running max dequant error bound
         self.pool_cfg = PagePoolConfig(
             n_pages=self.n_pages, page_tokens=self.page,
             n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
@@ -808,17 +834,77 @@ class PagedEngine:
         self.k_pool = self.k_pool.at[:, dst].set(self.k_pool[:, src])
         self.v_pool = self.v_pool.at[:, dst].set(self.v_pool[:, src])
         self.s_pool = self.s_pool.at[:, dst].set(self.s_pool[:, src])
-        if self._pool_shardings is not None:
-            # eager scatter output sharding is propagation-dependent:
-            # re-pin so the next donated jit call sees the exact pool
-            # layout it expects (no-op when propagation already matched)
-            self.k_pool = jax.device_put(self.k_pool,
-                                         self._pool_shardings[0])
-            self.v_pool = jax.device_put(self.v_pool,
-                                         self._pool_shardings[1])
-            self.s_pool = jax.device_put(self.s_pool,
-                                         self._pool_shardings[2])
+        self._repin_pools()
         self.stats.cow_page_copies += len(copies)
+
+    def _repin_pools(self) -> None:
+        """Eager (non-donated) pool updates leave output sharding to
+        propagation: re-pin so the next donated jit call sees the exact
+        pool layout it expects (no-op when propagation already matched,
+        and under tp=1)."""
+        if self._pool_shardings is None:
+            return
+        self.k_pool = jax.device_put(self.k_pool, self._pool_shardings[0])
+        self.v_pool = jax.device_put(self.v_pool, self._pool_shardings[1])
+        self.s_pool = jax.device_put(self.s_pool, self._pool_shardings[2])
+
+    # -- the host spill tier -------------------------------------------------
+
+    def _apply_spill_outs(self) -> None:
+        """Perform pending device->host page snapshots (swap-outs).
+
+        Must run before *any* pool write of this iteration: a spilled
+        source id is released the moment the scheduler swaps it out, so
+        the same schedule can hand it to a COW copy, a swap-in, or a
+        prefill as a destination — the snapshot read has to win."""
+        if self.spill_pool is None:
+            return
+        moves = self.allocator.drain_spill_outs()
+        if not moves:
+            return
+        pages = np.asarray([p for p, _ in moves], dtype=np.int32)
+        slots = [s for _, s in moves]
+        # pool-major [L, n, ...] -> slot-major [n, L, ...]
+        k = np.asarray(self.k_pool[:, pages]).swapaxes(0, 1)
+        v = np.asarray(self.v_pool[:, pages]).swapaxes(0, 1)
+        s = np.asarray(self.s_pool[:, pages]).swapaxes(0, 1)
+        self.spill_pool.store(slots, k, v, s)
+        self.stats.swap_out_pages += len(moves)
+        if self.recorder is not None:
+            self.recorder.record(pages, step=self.now,
+                                 tier=capture.TIER_HOST)
+
+    def _apply_swap_ins(self) -> None:
+        """Perform pending host->device restores (swap-ins) and carry
+        the physical-id renames into the runahead predictor.
+
+        Runs after spill-out reads and COW copies (both *read* pages a
+        restore may be about to overwrite) and before any prefill or
+        decode touches the restored pages."""
+        if self.spill_pool is None:
+            return
+        moves = self.allocator.drain_swap_ins()
+        if moves:
+            slots = [s for s, _ in moves]
+            pages = np.asarray([p for _, p in moves], dtype=np.int32)
+            if self._tier is not None:
+                # restored bytes land on re-taken ids: no staged copy
+                # of a destination page's previous life may survive
+                self._tier.invalidate(int(p) for p in pages)
+            k, v, s = self.spill_pool.load(slots)
+            self._spill_err = max(self._spill_err,
+                                  self.spill_pool.error_bound(slots))
+            self.k_pool = self.k_pool.at[:, pages].set(k.swapaxes(0, 1))
+            self.v_pool = self.v_pool.at[:, pages].set(v.swapaxes(0, 1))
+            self.s_pool = self.s_pool.at[:, pages].set(s.swapaxes(0, 1))
+            self._repin_pools()
+            self.stats.swap_in_pages += len(moves)
+            if self.recorder is not None:
+                self.recorder.record(pages, step=self.now,
+                                     tier=capture.TIER_HOST)
+        for rid, page_map in self.allocator.drain_remaps():
+            if self._predictor is not None:
+                self._predictor.remap(rid, page_map)
 
     def _run_prefill(self, job: PrefillJob) -> None:
         req = job.req
@@ -852,6 +938,11 @@ class PagedEngine:
                 req.first_token_at = self.now
                 req.last_logits = lg
                 self.stats.tokens_out += 1
+                if req.resumed_at >= 0:
+                    # preempted before its first token: the resume gap
+                    # ends at this prefill-produced token
+                    req.resume_gaps.append(self.now - req.resumed_at)
+                    req.resumed_at = -1.0
                 self._finish_if_done(req)
 
     def _run_decode(self, rows: list, bucket: int = 0) -> None:
@@ -896,11 +987,17 @@ class PagedEngine:
                     self.recorder.record(
                         head_sel[head_sel != NULL_PAGE],
                         rid=req.rid, step=self.now,
-                        shard=h // kv_l if self.tp > 1 else -1)
+                        shard=h // kv_l if self.tp > 1 else -1,
+                        tier=capture.TIER_HBM)
             if frontier:
                 req.out_tokens.append(int(lg[i].argmax()))
                 req.last_logits = lg[i].copy()
                 self.stats.tokens_out += 1
+                if req.resumed_at >= 0:
+                    # resume-TTFT sample: re-admission (swap or
+                    # recompute) to the next *new* token
+                    req.resume_gaps.append(self.now - req.resumed_at)
+                    req.resumed_at = -1.0
                 self._finish_if_done(req)
         self.stats.decode_rows_padded += rb - r_act
         # NSB accounting over the iteration's unique physical pages
@@ -950,6 +1047,10 @@ class PagedEngine:
         self.now += 1
         self.stats.iterations += 1
         plan = self.scheduler.schedule(self.now)
+        # strict transfer order: snapshot reads (swap-outs) before any
+        # pool write, COW copies next, restores (swap-ins) last, all
+        # before compute — see the individual method docstrings
+        self._apply_spill_outs()
         if self._tier is not None:
             # pages whose last reference dropped since the previous
             # iteration (preemption, finish, COW release) may be
@@ -957,6 +1058,7 @@ class PagedEngine:
             # their old content must never resolve again
             self._tier.invalidate(self.allocator.drain_released())
         self._apply_cow_copies()
+        self._apply_swap_ins()
         for job in plan.prefill:
             self._run_prefill(job)
         if plan.decode:
@@ -981,6 +1083,19 @@ class PagedEngine:
         next iteration, never what is computed.
         """
         tier, pred = self._tier, self._predictor
+        pages: list = []
+        # fetch-back: a spilled queue head swap-resumes inside this
+        # window (host -> HBM), and its remapped history pages go to
+        # the *front* of the staging list (HBM -> NSB) — so the first
+        # post-resume demand gather never touches a host page
+        fetched = self._fetch_back()
+        if fetched is not None and not fetched.done:
+            hist = list(pred.history(fetched.rid))
+            pages.extend(hist)
+            if self.recorder is not None and hist:
+                self.recorder.record(np.asarray(hist, dtype=np.int64),
+                                     rid=fetched.rid, step=self.now,
+                                     tier=capture.TIER_NSB)
         cands = [r for r in plan.decode if not r.done]
         seen = {r.rid for r in cands}
         for job in plan.prefill:
@@ -990,16 +1105,16 @@ class PagedEngine:
                     and req.rid in self.allocator._tables):
                 cands.append(req)
                 seen.add(req.rid)
-        if not cands:
+        if not cands and not pages:
             return
-        covered, proxy = pred.split([r.rid for r in cands])
-        tier.stats.filtered_rows += len(covered)
-        pages: list = []
-        for rid in covered:
-            pages.extend(pred.history(rid))
-        if proxy and self._proxy is not None:
-            pages.extend(self._predict_proxy(
-                [self.requests[rid] for rid in proxy]))
+        if cands:
+            covered, proxy = pred.split([r.rid for r in cands])
+            tier.stats.filtered_rows += len(covered)
+            for rid in covered:
+                pages.extend(pred.history(rid))
+            if proxy and self._proxy is not None:
+                pages.extend(self._predict_proxy(
+                    [self.requests[rid] for rid in proxy]))
         copies = tier.stage(pages, max_copies=plan.runahead_budget)
         if not copies:
             return
@@ -1014,6 +1129,38 @@ class PagedEngine:
         self.k_pool, self.v_pool = self._stage(
             self.k_pool, self.v_pool, jnp.asarray(src), jnp.asarray(dst))
         tier.stats.stage_calls += 1
+
+    def _fetch_back(self):
+        """Runahead-window early swap-resume of the spilled queue head.
+
+        ``_admit`` would resume it at the *next* ``schedule()`` anyway;
+        doing it here moves the host->device restore into the same
+        between-steps window the staging gather rides (the decoupled
+        sub-thread's budget), one iteration ahead of demand.  The resume
+        follows ``_admit``'s exact state transitions — all-or-nothing
+        restore, FIFO head only, ``max_running`` respected — so the
+        schedule a fetch-back produces is one the admission path could
+        also have produced.  Returns the resumed request, or None.
+        """
+        sched = self.scheduler
+        if (self.spill_pool is None or not sched.waiting
+                or len(sched.running) >= sched.max_running):
+            return None
+        head = sched.waiting[0]
+        if not head.spilled or not self.allocator.resume_spilled(
+                head.rid, max(head.prompt_len, head.computed)):
+            return None
+        sched.waiting.popleft()
+        head.spilled = False
+        head.state = RequestState.RUNNING
+        if head.n_preemptions > 0:
+            head.resumed_at = self.now
+        sched.running.append(head)
+        sched.n_swap_ins += 1
+        self.stats.fetch_backs += 1
+        # the restore itself rides this window too, not the next step's
+        self._apply_swap_ins()
+        return head
 
     def _predict_proxy(self, reqs: list) -> list:
         """Run the layer-0 proxy scorer over ``reqs`` and return their
@@ -1119,6 +1266,23 @@ class PagedEngine:
             "n_prefill_traces": self.n_prefill_traces(),
             "decode_rows_padded": self.stats.decode_rows_padded,
         }
+        # resume-TTFT: re-admission to next new token, both policies —
+        # the swap-vs-recompute headline spill_bench compares
+        gaps = [g for r in self.requests.values() for g in r.resume_gaps]
+        out["n_resumes"] = len(gaps)
+        out["p50_resume_ttft"] = percentile(gaps, 0.50)
+        out["p99_resume_ttft"] = percentile(gaps, 0.99)
+        out["spill_pages"] = self.allocator.spill_pages
+        if self.spill_pool is not None:
+            out["swap_outs"] = self.scheduler.n_swap_outs
+            out["swap_ins"] = self.scheduler.n_swap_ins
+            out["swap_out_pages"] = self.stats.swap_out_pages
+            out["swap_in_pages"] = self.stats.swap_in_pages
+            out["spill_fallbacks"] = self.allocator.stats.spill_failures
+            out["fetch_backs"] = self.stats.fetch_backs
+            out["spill_host_mib"] = self.spill_pool.host_bytes / 2 ** 20
+            out["spill_compressed"] = self.spill_pool.compress
+            out["spill_dequant_error_bound"] = self._spill_err
         if self.hot_shards is not None:
             roll = self.hot_shards.rollup()
             out["nsb_shard_hit_rates"] = roll["per_shard"]

@@ -34,6 +34,37 @@ The physical page id is the unit the whole memory-system story shares:
 Physical page 0 is reserved as a scratch/null page: padded batch rows and
 masked prefill positions write there, so the jitted model functions never
 need data-dependent shapes.  The allocator never hands page 0 out.
+
+**Host spill tier** (``spill_pages > 0``): preemption can *swap out*
+instead of free-and-recompute.  ``spill_request`` snapshots every page a
+request holds into host spill slots (the engine performs the actual
+device->host copies via :meth:`drain_spill_outs`) and releases the HBM
+pages; ``resume_spilled`` allocates fresh HBM pages all-or-nothing and
+queues the host->device restores (:meth:`drain_swap_ins`), so the
+request resumes at its old KV frontier with zero recompute.  Spill slots
+are only ids here — the bytes live in :class:`~.spill.HostSpillPool`.
+
+Invariants this module maintains (audited by
+:meth:`KVBlockAllocator.check_tier_invariants` and the hypothesis
+property suite):
+
+* **One tier per physical page id** — every allocatable HBM page id is
+  in exactly one of {referenced by >= 1 block table, cached-but-free
+  LRU, free list} at all times.  In particular a page released by a
+  spill is *unregistered* from the prefix index first, so its content
+  can never sit in the cached LRU and the spill pool simultaneously
+  (resume restores from the spill snapshot, never from a maybe-evicted
+  cache entry).
+* **Refcount conservation** — ``_ref[p]`` equals the number of block
+  tables containing ``p``; refs are only created by allocation/attach
+  and only destroyed by ``_release_ref``.
+* **Reservation is all-or-nothing** — ``ensure`` / ``ensure_prompt`` /
+  ``resume_spilled`` either take every page they need or take none and
+  leave state untouched (no partial reservations to unwind).
+* **Spill-slot bijection** — a spill slot id is owned by exactly one
+  (request, logical page) snapshot, or is free, or is draining (queued
+  for an engine copy); slots drain before they recycle, so a queued
+  host transfer can never read a slot a same-iteration spill reused.
 """
 
 from __future__ import annotations
@@ -58,6 +89,10 @@ class AllocatorStats:
     prefix_hits: int = 0       # pages attached from the prefix index
     prefix_evictions: int = 0  # cached pages reclaimed for fresh allocs
     cow_copies: int = 0        # shared pages privatised before a write
+    spill_out_pages: int = 0   # page snapshots queued device -> host
+    swap_in_pages: int = 0     # page restores queued host -> device
+    spill_failures: int = 0    # spill refused (tier off / slots short)
+    spill_unregistered: int = 0  # prefix entries dropped at spill time
 
 
 class KVBlockAllocator:
@@ -75,7 +110,7 @@ class KVBlockAllocator:
     """
 
     def __init__(self, n_pages: int, page_tokens: int,
-                 prefix_cache: bool = True) -> None:
+                 prefix_cache: bool = True, spill_pages: int = 0) -> None:
         if n_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.n_pages = n_pages
@@ -100,6 +135,27 @@ class KVBlockAllocator:
         # a freed page can be re-taken and rewritten, so a staged copy
         # of its old content must never resolve again
         self._released: list[int] = []
+        # -- host spill tier (ids only; bytes live in spill.HostSpillPool)
+        self.spill_pages = spill_pages
+        self._spill_free = list(range(spill_pages - 1, -1, -1))
+        # rid -> (slot ids, old physical page ids) aligned by logical page
+        self._spilled: dict[int, tuple[list[int], list[int]]] = {}
+        # engine transfer queues: device->host snapshots and host->device
+        # restores.  Slots referenced by queued swap-ins are *draining*:
+        # they recycle only when drain_swap_ins() hands the copies to the
+        # engine, so a spill in the same scheduler pass cannot overwrite
+        # a snapshot before its restore is read.
+        self._pending_spill_out: list[tuple[int, int]] = []  # (page, slot)
+        self._pending_swap_in: list[tuple[int, int]] = []    # (slot, page)
+        self._slots_draining: list[int] = []
+        # rid -> {old page id -> new page id} from the latest resume; the
+        # engine drains these to remap predictor history onto the
+        # restored physical ids
+        self._pending_remaps: list[tuple[int, dict[int, int]]] = []
+        # page id -> number of live host snapshots taken from it: while
+        # > 0 a release must not park the id in the cached LRU (see
+        # _release_ref — one home per content)
+        self._snap_refs: dict[int, int] = {}
         self.stats = AllocatorStats()
 
     # -- capacity ------------------------------------------------------------
@@ -161,6 +217,17 @@ class KVBlockAllocator:
             return
         del self._ref[page]
         self._released.append(page)
+        if page in self._page_key and page in self._snap_refs:
+            # the page's content is snapshotted in the host spill tier:
+            # one home per content — unregister it so the id free-lists
+            # instead of sitting in the cached LRU *and* the spill pool
+            # (resume always restores from the snapshot; an LRU entry
+            # could be evicted underneath it).  A later re-take of the
+            # same id by unrelated content may lose its cache entry this
+            # way — a conservative cache miss, never a correctness bug.
+            key = self._page_key.pop(page)
+            del self._index[key]
+            self.stats.spill_unregistered += 1
         if page in self._page_key:
             # content survives for future prefix attaches, LRU order
             self._cached[page] = None
@@ -331,13 +398,171 @@ class KVBlockAllocator:
             self._reg_state[rid] = (n_full, h)
         return new
 
+    # -- host spill tier ------------------------------------------------------
+
+    @property
+    def spill_slots_free(self) -> int:
+        return len(self._spill_free)
+
+    @property
+    def pages_spilled(self) -> int:
+        """Host snapshots currently held (slots owned by spilled rids)."""
+        return sum(len(s) for s, _ in self._spilled.values())
+
+    def is_spilled(self, rid: int) -> bool:
+        return rid in self._spilled
+
+    def _drop_snap_refs(self, old_pages) -> None:
+        for p in old_pages:
+            n = self._snap_refs.get(p, 0) - 1
+            if n > 0:
+                self._snap_refs[p] = n
+            else:
+                self._snap_refs.pop(p, None)
+
+    def spill_request(self, rid: int) -> bool:
+        """Swap ``rid`` out: snapshot every page it holds into host spill
+        slots and release the HBM pages.
+
+        All-or-nothing on the slots; returns False (state untouched,
+        ``stats.spill_failures``) when the tier is disabled or short.
+        The engine must drain :meth:`drain_spill_outs` — performing the
+        device->host reads — before any pool write in the next
+        iteration, because the released ids can be re-taken immediately.
+        """
+        pages = self._tables.get(rid, [])
+        if not self.spill_pages or not pages \
+                or len(pages) > len(self._spill_free):
+            self.stats.spill_failures += 1
+            return False
+        slots = [self._spill_free.pop() for _ in pages]
+        self._pending_spill_out.extend(zip(pages, slots))
+        self._spilled[rid] = (slots, list(pages))
+        for p in pages:
+            self._snap_refs[p] = self._snap_refs.get(p, 0) + 1
+        self._tables.pop(rid)
+        self._reg_state.pop(rid, None)     # resume rebuilds on fresh ids
+        self.stats.frees += len(pages)
+        self.stats.spill_out_pages += len(pages)
+        for p in reversed(pages):
+            self._release_ref(p)
+        return True
+
+    def resume_spilled(self, rid: int, n_tokens: int = 0) -> bool:
+        """Swap ``rid`` back in: allocate fresh HBM pages for every
+        snapshot (plus enough extra private pages to cover ``n_tokens``
+        positions, e.g. the rest of a partially-prefilled prompt) and
+        queue the host->device restores (:meth:`drain_swap_ins`).
+
+        All-or-nothing; returns False (``stats.admission_blocks``) when
+        the pool cannot supply every page.  On success the request's
+        block table covers its old KV frontier on *new* physical ids;
+        the old->new map is queued for :meth:`drain_remaps` so the
+        runahead predictor can carry its history across the rename.
+        """
+        rec = self._spilled.get(rid)
+        if rec is None:
+            return False
+        slots, old_pages = rec
+        extra = max(0, self.pages_for_tokens(n_tokens) - len(slots))
+        if len(slots) + extra > self.pages_free:
+            self.stats.admission_blocks += 1
+            return False
+        del self._spilled[rid]
+        self._drop_snap_refs(old_pages)
+        pages = [self._take_page() for _ in range(len(slots) + extra)]
+        for p in pages:
+            self._ref[p] = 1
+        self._tables.setdefault(rid, []).extend(pages)
+        self._pending_swap_in.extend(zip(slots, pages))
+        # slots drain (recycle only once the engine takes the copies):
+        # a spill queued later in the same scheduler pass must not reuse
+        # a slot whose restore bytes have not been read yet
+        self._slots_draining.extend(slots)
+        self._pending_remaps.append((rid, dict(zip(old_pages, pages))))
+        self.stats.allocs += len(pages)
+        self.stats.swap_in_pages += len(slots)
+        self.stats.peak_in_use = max(self.stats.peak_in_use,
+                                     self.pages_in_use)
+        return True
+
+    def drain_spill_outs(self) -> list[tuple[int, int]]:
+        """Pending ``(page, slot)`` device->host snapshots.  The engine
+        must read the page bytes before this iteration writes any pool
+        page (released ids are re-takeable the moment they free)."""
+        out = self._pending_spill_out
+        self._pending_spill_out = []
+        return out
+
+    def drain_swap_ins(self) -> list[tuple[int, int]]:
+        """Pending ``(slot, page)`` host->device restores; taking them
+        recycles the draining slots.  The engine applies these *after*
+        spill-out reads and COW copies (both read pages a restore may
+        overwrite) and before any prefill/decode touches the pages."""
+        out = self._pending_swap_in
+        self._pending_swap_in = []
+        self._spill_free.extend(self._slots_draining)
+        self._slots_draining = []
+        return out
+
+    def drain_remaps(self) -> list[tuple[int, dict[int, int]]]:
+        """Pending ``(rid, {old page -> new page})`` renames from
+        resumes, for predictor-history carry-over."""
+        out = self._pending_remaps
+        self._pending_remaps = []
+        return out
+
+    def check_tier_invariants(self) -> None:
+        """Audit the one-tier-per-page partition and the spill-slot
+        bijection (see the module docstring); raises AssertionError on
+        the first violation.  O(n_pages) — called from tests and the
+        hypothesis property suite, not the hot path."""
+        held: dict[int, int] = {}
+        for table in self._tables.values():
+            for p in table:
+                held[p] = held.get(p, 0) + 1
+        assert held == self._ref, \
+            f"refcount conservation broken: {held} != {self._ref}"
+        live, free, cached = set(held), set(self._free), set(self._cached)
+        assert len(free) == len(self._free), "duplicate free-list entries"
+        assert live.isdisjoint(free), f"live∩free: {live & free}"
+        assert live.isdisjoint(cached), f"live∩cached: {live & cached}"
+        assert free.isdisjoint(cached), f"free∩cached: {free & cached}"
+        assert live | free | cached == set(range(1, self.n_pages)), \
+            "page ids lost or invented across tiers"
+        for p in self._page_key:
+            assert p not in free, f"registered page {p} on the free list"
+        # spill slots: free + draining + owned partition [0, spill_pages)
+        owned: list[int] = []
+        snaps: dict[int, int] = {}
+        for slots, old in self._spilled.values():
+            assert len(slots) == len(old)
+            owned.extend(slots)
+            for p in old:
+                snaps[p] = snaps.get(p, 0) + 1
+        slots_all = self._spill_free + self._slots_draining + owned
+        assert sorted(slots_all) == list(range(self.spill_pages)), \
+            "spill slots lost, invented, or double-owned"
+        assert snaps == self._snap_refs, \
+            f"snapshot refcounts diverged: {snaps} != {self._snap_refs}"
+        # the bugfix invariant: a snapshotted page id never also sits in
+        # the cached-but-free LRU (one home per content)
+        assert cached.isdisjoint(snaps), \
+            f"pages in cached LRU and spill pool: {cached & set(snaps)}"
+
     # -- release -------------------------------------------------------------
 
     def free_request(self, rid: int) -> list[int]:
         """Drop every reference ``rid`` holds; returns the released ids.
         Shared pages stay live for their other holders; registered pages
         whose refcount hits 0 park in the cached LRU, the rest return to
-        the free list (LIFO, keeping hot physical ids dense)."""
+        the free list (LIFO, keeping hot physical ids dense).  A spilled
+        rid's host slots are recycled too (snapshot discarded)."""
+        rec = self._spilled.pop(rid, None)
+        if rec is not None:
+            slots, old_pages = rec
+            self._spill_free.extend(slots)
+            self._drop_snap_refs(old_pages)
         pages = self._tables.pop(rid, [])
         self._reg_state.pop(rid, None)     # a resume rebuilds its table
         self.stats.frees += len(pages)

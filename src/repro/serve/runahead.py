@@ -45,6 +45,28 @@ IMP's one-batch-ahead limitation (``core/nvr/prefetchers.py``) is kept
 as the in-repo baseline: ``mode="imp"`` stages exactly the pages the
 *current* step selected — always one step behind the selection drift —
 with no proxy slice and no stability filter.
+
+With the host spill tier configured (``PagedEngine(spill_pages=...)``)
+the same between-steps window also performs **fetch-back**: when the
+waiting-queue head is a swapped-out request, the engine swap-resumes it
+inside ``_run_runahead`` — host slots restore to fresh HBM pages, the
+predictor's history renames through :meth:`RunaheadPredictor.remap`,
+and the remapped history pages are staged into the NSB tail ahead of
+the demand pile-up, so a resumed request's first post-resume gather
+never touches a host page (host -> HBM -> NSB in one budget window).
+
+Invariants this module holds (checked by the hypothesis suite):
+
+* **Slot bijection** — every staged slot is owned by exactly one demand
+  page and ``hot_map[page] == slot`` iff ``page`` owns ``slot``; free,
+  staged, and (nothing else) partition the slot space.
+* **Staleness-free resolution** — the hot-map never resolves a page
+  whose demand copy was rewritten or freed after staging: writers
+  invalidate first (or write through, for the decode frontier).
+* **Speculation never steers computation** — predictor output and
+  staged bytes only change where reads are served from; block tables
+  and the demand pool stay authoritative, so tokens are bitwise
+  invariant to runahead mode.
 """
 
 from __future__ import annotations
@@ -268,6 +290,17 @@ class RunaheadPredictor:
 
     def forget(self, rid: int) -> None:
         self._hist.pop(rid, None)
+
+    def remap(self, rid: int, page_map: dict) -> None:
+        """Rename ``rid``'s history through ``page_map`` (old physical
+        page id -> new), preserving the stability counter: a swap-resume
+        restores identical page *content* onto fresh physical ids, so
+        the request's selection pattern — and therefore its stability —
+        carries over; only the ids it is expressed in change.  Ids not
+        in the map (e.g. still-live shared prefix pages) pass through."""
+        h = self._hist.get(rid)
+        if h is not None and h.sel:
+            h.sel = tuple(sorted(page_map.get(p, p) for p in h.sel))
 
     def split(self, rids) -> tuple[list, list]:
         """(history-covered rids, proxy rids) for the next step.  In

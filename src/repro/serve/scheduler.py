@@ -21,12 +21,33 @@ the prompt end, so the final prefill chunk always runs and produces the
 first-token logits.
 
 Preemption: when a decode step needs a fresh KV page and the pool is
-exhausted, the most-recently-admitted running request is evicted
-(recompute policy — its pages are freed and it re-enters the *front* of
-the waiting queue, keeping its original FIFO priority).  On resume the
-engine re-prefills the prompt and *replays* the already-generated tokens
+exhausted, the most-recently-admitted running request is evicted and
+re-enters the *front* of the waiting queue, keeping its original FIFO
+priority.  With a host spill tier configured (``allocator.spill_pages >
+0``) eviction is **swap-out**: the victim's pages snapshot to host slots
+and its KV frontier (``computed``) is preserved, so resume is a
+host->device restore instead of recompute.  Without the tier — or when
+the tier itself is full — eviction falls back to the recompute policy:
+pages are freed, ``computed`` drops to 0, and on resume the engine
+re-prefills the prompt and *replays* the already-generated tokens
 through the decode path, which reproduces the original computation
 exactly (see ``engine.PagedEngine``).
+
+Scheduling invariants the engine and tests rely on:
+
+* **Reservation is all-or-nothing** — ``_admit`` only admits the queue
+  head when the allocator can hold its *entire* prompt (or, for a
+  spilled head, restore its entire snapshot); a request never holds a
+  partial reservation.
+* **Admit-then-evict cannot happen within one iteration** — decode
+  allocations run before admission, and prefill ensures on reserved
+  prompts never allocate, so a request admitted by ``schedule()`` still
+  holds its pages (and has drained its COW copies) when any later
+  iteration preempts it.  Spill snapshots therefore always read
+  fully-materialised pool bytes.
+* **Preemption preserves FIFO rank** — a resumed request keeps its
+  original ``admission_seq``, so it cannot be victimised by requests it
+  used to outrank.
 
 Bucket-aware plans: when constructed with ``row_buckets`` (the engine
 passes ``row_buckets(max_batch)`` when decode-row bucketing is on), the
@@ -66,9 +87,11 @@ class Request:
     ``computed`` is the KV frontier: the number of positions whose K/V
     pages are materialised.  Positions ``[0, len(prompt))`` are filled by
     prefill chunks; positions beyond that by decode steps.  After a
-    preemption ``computed`` drops to 0 and climbs back through the same
-    chunk schedule, then through decode *replay* of the tokens already in
-    ``out_tokens``.
+    recompute preemption ``computed`` drops to 0 and climbs back through
+    the same chunk schedule, then through decode *replay* of the tokens
+    already in ``out_tokens``; after a swap-out preemption (host spill
+    tier) ``computed`` is preserved and resume restores the snapshot
+    instead.
     """
 
     rid: int
@@ -85,6 +108,9 @@ class Request:
     n_preemptions: int = 0
     cached_tokens: int = 0          # prompt tokens skipped, last admission
     last_logits: np.ndarray | None = None
+    spilled: bool = False           # snapshot lives in the host spill tier
+    resumed_at: float = -1.0        # last re-admission after a preemption
+    resume_gaps: list = field(default_factory=list)  # resume -> next token
 
     @property
     def prompt_len(self) -> int:
@@ -228,6 +254,8 @@ class Scheduler:
         self.running: list[Request] = []
         self._admission_seq = 0
         self.n_preemptions = 0
+        self.n_swap_outs = 0              # preemptions served by spill
+        self.n_swap_ins = 0               # resumes served by restore
         self.prefill_tokens_skipped = 0   # prefix-cache fast-forwards
 
     # -- queue interface -----------------------------------------------------
@@ -243,9 +271,16 @@ class Scheduler:
     # -- internals -----------------------------------------------------------
 
     def _preempt(self, victim: Request) -> None:
-        self.allocator.free_request(victim.rid)
+        # swap-out when the spill tier can take the snapshot, recompute
+        # otherwise (tier disabled, or short on slots right now)
+        if self.allocator.spill_pages \
+                and self.allocator.spill_request(victim.rid):
+            victim.spilled = True       # computed preserved: swap resume
+            self.n_swap_outs += 1
+        else:
+            self.allocator.free_request(victim.rid)
+            victim.computed = 0
         victim.state = RequestState.PREEMPTED
-        victim.computed = 0
         victim.n_preemptions += 1
         self.n_preemptions += 1
         self.running.remove(victim)
@@ -273,20 +308,37 @@ class Scheduler:
         admitted = []
         while (self.waiting and len(self.running) < self.max_running):
             head = self.waiting[0]
-            # reserve the whole prompt now (all-or-nothing, cached prefix
-            # pages attach for free): an admitted request can never lose
-            # its prompt pages to this iteration's other allocations
-            ok, cached = self.allocator.ensure_prompt(head.rid, head.prompt)
-            if not ok:
-                break  # head-of-line blocking keeps admission FIFO
+            if head.spilled:
+                # swap-resume: restore the snapshot onto fresh HBM pages
+                # (all-or-nothing, like a fresh reservation) and keep the
+                # preserved KV frontier — no re-prefill, no replay
+                if not self.allocator.resume_spilled(
+                        head.rid, max(head.prompt_len, head.computed)):
+                    break  # head-of-line blocking keeps admission FIFO
+                head.spilled = False
+                self.n_swap_ins += 1
+            else:
+                # reserve the whole prompt now (all-or-nothing, cached
+                # prefix pages attach for free): an admitted request can
+                # never lose its prompt pages to this iteration's other
+                # allocations
+                ok, cached = self.allocator.ensure_prompt(head.rid,
+                                                          head.prompt)
+                if not ok:
+                    break  # head-of-line blocking keeps admission FIFO
+                # fast-forward past prefix-cached pages, keeping the last
+                # prompt token to recompute: its prefill produces the
+                # first-token logits (its page was COW'd on a full hit)
+                head.computed = min(cached, head.prompt_len - 1)
+                head.cached_tokens = head.computed
+                self.prefill_tokens_skipped += head.computed
             self.waiting.popleft()
             head.state = RequestState.RUNNING
-            # fast-forward past prefix-cached pages, keeping the last
-            # prompt token to recompute: its prefill produces the
-            # first-token logits (its page was COW'd on a full hit)
-            head.computed = min(cached, head.prompt_len - 1)
-            head.cached_tokens = head.computed
-            self.prefill_tokens_skipped += head.computed
+            if head.n_preemptions > 0:
+                # resume-TTFT clock for both policies: the engine appends
+                # (token time - resumed_at) to resume_gaps at the next
+                # emitted token
+                head.resumed_at = now
             # a resumed (previously preempted) request keeps its original
             # admission_seq so it cannot be victimised by requests it
             # used to outrank

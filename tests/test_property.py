@@ -51,6 +51,8 @@ _alloc_op = st.one_of(
     st.tuples(st.just("ensure"), st.integers(0, 3), st.integers(1, 20)),
     st.tuples(st.just("register"), st.integers(0, 3), st.integers(0, 0)),
     st.tuples(st.just("free"), st.integers(0, 3), st.integers(0, 0)),
+    st.tuples(st.just("spill"), st.integers(0, 3), st.integers(0, 0)),
+    st.tuples(st.just("resume"), st.integers(0, 3), st.integers(0, 20)),
 )
 
 
@@ -73,28 +75,37 @@ def _alloc_invariants(al: KVBlockAllocator) -> None:
     for rid in al._tables:
         bt = al.table_array(rid, 16)
         assert all(bt[al.owned(rid):] == NULL_PAGE)
+    # every physical page id lives in exactly one tier (live HBM, free,
+    # cached LRU) and spill slots form a bijection with host snapshots
+    al.check_tier_invariants()
 
 
 @SET
-@given(st.lists(_alloc_op, min_size=1, max_size=60), st.integers(4, 12))
-def test_kv_allocator_refcount_invariants(ops_list, n_pages):
-    """Random ensure/prefix-attach/register/free sequences: never hand
-    out NULL_PAGE, never double-allocate a live page, conservation of
-    pages, NULL padding beyond the owned table."""
-    al = KVBlockAllocator(n_pages=n_pages, page_tokens=4)
+@given(st.lists(_alloc_op, min_size=1, max_size=60), st.integers(4, 12),
+       st.integers(0, 8))
+def test_kv_allocator_refcount_invariants(ops_list, n_pages, spill_pages):
+    """Random ensure/prefix-attach/register/free/spill/resume sequences:
+    never hand out NULL_PAGE, never double-allocate a live page,
+    conservation of pages, NULL padding beyond the owned table, and the
+    tier partition — each page id in exactly one of {live HBM, free
+    list, cached LRU}, never simultaneously snapshotted-on-host and
+    parked in the cached LRU."""
+    al = KVBlockAllocator(n_pages=n_pages, page_tokens=4,
+                          spill_pages=spill_pages)
     assigned: dict = {}                     # rid -> prompt in its table
     for kind, rid, arg in ops_list:
-        if kind == "prompt":
+        spilled = al.is_spilled(rid)
+        if kind == "prompt" and not spilled:
             prompt = assigned.get(rid, _ALLOC_PROMPTS[arg])
             ok, cached = al.ensure_prompt(rid, prompt)
             if ok:
                 assigned[rid] = prompt
                 assert cached <= len(prompt)
-        elif kind == "ensure":
+        elif kind == "ensure" and not spilled:
             before = al.owned(rid)
             if al.ensure(rid, arg):
                 assert al.owned(rid) >= before
-        elif kind == "register":
+        elif kind == "register" and not spilled:
             if rid in assigned:
                 p = assigned[rid]
                 al.register_prefix(rid, p, al.owned(rid)
@@ -102,12 +113,29 @@ def test_kv_allocator_refcount_invariants(ops_list, n_pages):
         elif kind == "free":
             al.free_request(rid)
             assigned.pop(rid, None)
-        al.drain_copies()                   # keep the COW queue bounded
+        elif kind == "spill" and not spilled:
+            held = al.owned(rid)
+            if al.spill_request(rid):
+                assert al.owned(rid) == 0          # HBM side released
+                assert al.is_spilled(rid)
+            else:
+                assert al.owned(rid) == held       # all-or-nothing
+        elif kind == "resume" and spilled:
+            if al.resume_spilled(rid, n_tokens=arg):
+                assert not al.is_spilled(rid)
+                assert al.owned(rid) >= al.pages_for_tokens(arg)
+        al.drain_copies()                   # keep the queues bounded
+        al.drain_spill_outs()
+        al.drain_swap_ins()
+        al.drain_remaps()
         _alloc_invariants(al)
-    for rid in list(al._tables):
+    for rid in range(4):
         al.free_request(rid)
+    al.drain_swap_ins()
     _alloc_invariants(al)
     assert al.pages_in_use == 0
+    assert al.pages_spilled == 0
+    assert al.spill_slots_free == spill_pages
 
 
 _tier_op = st.one_of(

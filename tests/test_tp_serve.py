@@ -94,11 +94,12 @@ for i in range(6):
                  np.concatenate([sys_prompts[i % 2], sfx]), 5))
 
 def run(mesh=None, n_pages=0, kernel="xla", capture=False,
-        runahead="off"):
+        runahead="off", spill=0):
     eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
                       max_batch=4, chunk=8, nsb_pages=32, mesh=mesh,
                       kernel=kernel, capture_trace=capture,
-                      runahead=runahead, runahead_pages=8)
+                      runahead=runahead, runahead_pages=8,
+                      spill_pages=spill)
     eng.run([(t, p.copy(), g) for t, p, g in work])
     return eng
 
@@ -274,6 +275,41 @@ print("TP2_RUNAHEAD_OK")
     r = run_py(code, n_dev=2)
     assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
     assert "TP2_RUNAHEAD_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_tp2_host_spill_swap_resume_bitwise():
+    """The host spill tier composes with tensor parallelism: swap-out
+    snapshots the *sharded* pools (device->host gather re-assembles the
+    full KV-head dim), swap-in restores onto freshly re-pinned sharded
+    pools, and tokens/logits stay bitwise-identical to the calm tp=1
+    run — including with runahead fetch-back active."""
+    code = _COMMON + """
+base = run()                                   # tp=1, calm, no spill
+mesh = make_serve_mesh(2)
+tight = run(mesh=mesh, n_pages=1 + 9, spill=16)
+assert tight.scheduler.n_swap_outs > 0
+assert tight.scheduler.n_swap_ins == tight.scheduler.n_swap_outs
+assert_bitwise(base, tight)
+
+# restored pools stay physically sharded after the host round-trip
+shards = tight.k_pool.addressable_shards
+assert len(shards) == 2
+assert [s.data.shape[3] for s in shards] == [cfg.n_kv_heads // 2] * 2
+tight.allocator.check_tier_invariants()
+m = tight.metrics()
+assert m["tp"] == 2 and m["swap_out_pages"] == m["swap_in_pages"] > 0
+
+# fetch-back under sharding: the spilled queue head resumes in the
+# runahead window and its history pages stage onto the sharded tail
+ra = run(mesh=mesh, n_pages=1 + 9, spill=16, runahead="nvr")
+assert ra.scheduler.n_swap_outs > 0
+assert_bitwise(base, ra)
+print("TP2_SPILL_OK")
+"""
+    r = run_py(code, n_dev=2)
+    assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
+    assert "TP2_SPILL_OK" in r.stdout
 
 
 @pytest.mark.slow
