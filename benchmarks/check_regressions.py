@@ -77,6 +77,14 @@ GATES: dict[str, dict[str, str]] = {
         "fetch_backs_swap_ra": "higher",
         "int8_dequant_error_bound": "lower",
     },
+    "overlap_bench": {
+        "bitwise_parity": "higher",              # 1.0 = asserted in-run
+        "tpot_p99_improvement_x": "higher",
+        "p99_tpot_modeled_async": "lower",
+        "p99_ttft_modeled_async": "lower",
+        "overlap_fraction": "higher",
+        "plan_reuse_fraction": "higher",
+    },
 }
 
 

@@ -448,6 +448,16 @@ def spill_bench():
     return _sp()
 
 
+def overlap_bench():
+    """Pipelined executor vs the synchronous step loop under mixed
+    long-prefill/steady-decode load: bitwise token/logit parity and an
+    identical iteration log asserted in-run, TTFT/TPOT split per stream,
+    modeled p99 TPOT improvement from overlapping the streams (defined
+    in benchmarks/serve_bench.py; lazy import as above)."""
+    from .serve_bench import overlap_bench as _ov
+    return _ov()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -465,4 +475,5 @@ ALL = {
     "tp_serve_bench": tp_serve_bench,  # KV-head-sharded TP serving
     "runahead_bench": runahead_bench,  # online runahead off/imp/nvr
     "spill_bench": spill_bench,        # host spill swap vs recompute
+    "overlap_bench": overlap_bench,    # pipelined vs sync executor
 }

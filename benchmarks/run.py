@@ -11,7 +11,7 @@ the headline metrics (non-finite values nulled, keys sorted), the
 BENCH_SCALE it ran at, the git sha and the harness wall time — one
 stable file per bench that CI uploads and successive commits can diff.
 
-Beyond the paper figures, eight engineering benches ride along:
+Beyond the paper figures, nine engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -33,6 +33,11 @@ Beyond the paper figures, eight engineering benches ride along:
                       preemption as swap-out vs free-and-recompute (+
                       runahead fetch-back, int8 spill), bitwise parity
                       and resume-TTFT improvement asserted in-run
+  overlap_bench     — pipelined executor vs the synchronous step loop
+                      under mixed long-prefill/steady-decode load:
+                      bitwise parity + identical iteration log asserted
+                      in-run, TTFT/TPOT split per stream, modeled p99
+                      TPOT improvement from stream overlap
 
 CI gates the deterministic headline metrics against committed baselines
 (benchmarks/check_regressions.py; see benchmarks/README.md).

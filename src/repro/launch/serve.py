@@ -125,7 +125,8 @@ def _run_continuous(cfg, params, args):
                       runahead=args.runahead,
                       runahead_pages=args.runahead_pages,
                       spill_pages=args.spill,
-                      spill_compress=args.spill_compress)
+                      spill_compress=args.spill_compress,
+                      executor=args.executor)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
@@ -143,7 +144,18 @@ def _run_continuous(cfg, params, args):
           f"decode rows")
     print(f"[serve-cb] latency p50/p99 {_fmt(m['p50_latency'], '.0f')}/"
           f"{_fmt(m['p99_latency'], '.0f')} iters; TTFT p50/p99 "
-          f"{_fmt(m['p50_ttft'], '.0f')}/{_fmt(m['p99_ttft'], '.0f')}")
+          f"{_fmt(m['p50_ttft'], '.0f')}/{_fmt(m['p99_ttft'], '.0f')}; "
+          f"TPOT p50/p99 {_fmt(m['p50_tpot'], '.2f')}/"
+          f"{_fmt(m['p99_tpot'], '.2f')}")
+    if args.executor == "async":
+        print(f"[serve-cb] executor=async: overlap fraction "
+              f"{_fmt(m['overlap_fraction'])} "
+              f"({m['prefill_iterations']} prefill / "
+              f"{m['decode_iterations']} decode / "
+              f"{m['overlap_iterations']} overlapped iterations), "
+              f"plan reuse {_fmt(m['plan_reuse_fraction'])} "
+              f"({m['plan_repairs']} repairs), p99 TPOT "
+              f"{_fmt(m['p99_tpot'], '.2f')} iters/token")
     print(f"[serve-cb] NSB hot-set hit rate "
           f"{_fmt(m['nsb_hot_hit_rate'])}")
     if args.runahead != "off":
@@ -240,6 +252,13 @@ def main(argv=None):
                    help="int8-compress spilled K/V planes (per-page "
                         "scales via optim.compress; page summaries stay "
                         "exact, so TopK selection survives bitwise)")
+    p.add_argument("--executor", choices=("sync", "async"),
+                   default="sync",
+                   help="step-loop executor: sync = monolithic oracle "
+                        "loop; async = pipelined prefill/decode streams "
+                        "with double-buffered plans and overlapped "
+                        "runahead staging (tokens + logits bitwise-"
+                        "identical to sync)")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")

@@ -64,7 +64,7 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -259,6 +259,22 @@ class PagedServeStats(ServeStats):
     swap_out_pages: int = 0         # pages snapshotted device -> host
     swap_in_pages: int = 0          # pages restored host -> device
     fetch_backs: int = 0            # runahead-window early swap-resumes
+    # per-stream iteration accounting (the disaggregated executor's
+    # TTFT/TPOT split): an iteration belongs to the prefill stream when
+    # it ran >=1 prompt chunk, to the decode stream when it ran a decode
+    # batch, and to both when the streams overlap
+    prefill_iterations: int = 0
+    decode_iterations: int = 0
+    overlap_iterations: int = 0     # iterations where both streams ran
+    # (n_prefill_chunks, n_decode_rows) per iteration — the shared
+    # timeline overlap_bench's deterministic cost model replays to
+    # compare sync (streams serial) vs async (streams overlapped)
+    iter_log: list = field(default_factory=list)
+
+
+# sentinel distinguishing "run _fetch_back inline" (sync loop) from "the
+# executor already ran it in the overlap window, possibly returning None"
+_FETCH_UNSET = object()
 
 
 def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
@@ -587,7 +603,8 @@ class PagedEngine:
                  runahead: str = "off",
                  runahead_pages: int = 8,
                  spill_pages: int = 0,
-                 spill_compress: bool = False) -> None:
+                 spill_compress: bool = False,
+                 executor: str = "sync") -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -602,6 +619,9 @@ class PagedEngine:
         if runahead not in runahead_mod.MODES:
             raise ValueError(f"runahead must be one of "
                              f"{runahead_mod.MODES}, got {runahead!r}")
+        if executor not in ("sync", "async"):
+            raise ValueError(f"executor must be 'sync' or 'async', "
+                             f"got {executor!r}")
         self.mesh = mesh
         if mesh is not None:
             if sharding.SERVE_TP_AXIS not in dict(mesh.shape):
@@ -784,6 +804,17 @@ class PagedEngine:
         self.now = 0
         self._next_rid = 0
         self.requests: dict[int, Request] = {}
+        # pipelined executor (executor="async"): prefill/decode streams
+        # dispatch before either materialises, plans double-buffer via
+        # schedule_speculative/commit, and runahead transfers ride the
+        # overlap window.  The synchronous loop (_step_sync) stays as
+        # the bitwise parity oracle.
+        self.executor = executor
+        if executor == "async":
+            from .executor import PipelinedExecutor
+            self._pipeline = PipelinedExecutor(self)
+        else:
+            self._pipeline = None
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -906,7 +937,17 @@ class PagedEngine:
             if self._predictor is not None:
                 self._predictor.remap(rid, page_map)
 
-    def _run_prefill(self, job: PrefillJob) -> None:
+    def _dispatch_prefill(self, job: PrefillJob):
+        """Dispatch one prefill chunk and return its (device-resident)
+        logits without materialising them.
+
+        Everything that must happen at *dispatch* time lives here: the
+        staged-copy invalidation (the chunk rewrites KV on its pages),
+        the jit call itself, the ``computed`` frontier advance, and the
+        prefix registration — all host bookkeeping downstream scheduling
+        depends on, none of it reading a sampled value.  The pipelined
+        executor calls this for every chunk before blocking on any
+        stream; :meth:`_commit_prefill` does the sampling."""
         req = job.req
         toks = np.zeros((self.chunk,), dtype=np.int32)
         toks[: job.n_tokens] = req.prompt[job.start:job.start + job.n_tokens]
@@ -929,6 +970,12 @@ class PagedEngine:
                                        min(req.computed, req.prompt_len))
         self.stats.prefill_tokens += job.n_tokens
         self.stats.prefill_calls += 1
+        return logits
+
+    def _commit_prefill(self, job: PrefillJob, logits) -> None:
+        """The prefill stream's sample/commit boundary: materialise the
+        final chunk's logits and sample the first token."""
+        req = job.req
         if req.computed == req.prompt_len:
             lg = np.asarray(logits)
             # first pass samples the first token here; a preemption
@@ -936,6 +983,8 @@ class PagedEngine:
             if not req.out_tokens:
                 req.out_tokens.append(int(lg.argmax()))
                 req.first_token_at = self.now
+                req.last_token_at = self.now
+                req.token_ticks.append(self.now)
                 req.last_logits = lg
                 self.stats.tokens_out += 1
                 if req.resumed_at >= 0:
@@ -945,20 +994,28 @@ class PagedEngine:
                     req.resumed_at = -1.0
                 self._finish_if_done(req)
 
-    def _run_decode(self, rows: list, bucket: int = 0) -> None:
-        r_act = len(rows)
-        # ragged batches pad to the scheduler's power-of-two row bucket
-        # (NULL block tables, scratch-page scribbles) instead of always
-        # to max_batch: O(log R_max) distinct decode traces, and the
-        # padded compute shrinks with the actual batch
-        rb = bucket or self.max_batch
+    def _run_prefill(self, job: PrefillJob) -> None:
+        self._commit_prefill(job, self._dispatch_prefill(job))
+
+    def _dispatch_decode(self, pairs: list, rb: int):
+        """Dispatch one decode batch over ``(row_slot, request)`` pairs
+        and return its device-resident ``(logits, sel)``.
+
+        The slot indirection is what lets the pipelined executor keep
+        each request's decode row stable across iterations (maxtext-
+        style per-slot insertion): a slot with no request behind it is a
+        hole, and holes carry exactly the NULL-row padding the bucketed
+        sync path pads with (token 0, pos 0, zeroed block table — every
+        write lands on the reserved scratch page), so row placement
+        never changes any occupied row's logits.  The synchronous loop
+        passes the dense ``enumerate(rows)`` pairing."""
         token = np.zeros((rb,), dtype=np.int32)
         pos = np.zeros((rb,), dtype=np.int32)
         bts = np.zeros((rb, self.n_logical), dtype=np.int32)
-        for i, req in enumerate(rows):
-            token[i] = req.seq[req.computed]
-            pos[i] = req.computed
-            bts[i] = self.allocator.table_array(req.rid, self.n_logical)
+        for slot, req in pairs:
+            token[slot] = req.seq[req.computed]
+            pos[slot] = req.computed
+            bts[slot] = self.allocator.table_array(req.rid, self.n_logical)
         hot_args = ()
         if self._tier is not None:
             # frontier pages are written inside this call, but the
@@ -970,10 +1027,21 @@ class PagedEngine:
             self.params, self.k_pool, self.v_pool, self.s_pool,
             jnp.asarray(token), jnp.asarray(pos), jnp.asarray(bts),
             *hot_args)
+        return logits, sel
+
+    def _commit_decode(self, pairs: list, logits, sel, rb: int) -> None:
+        """The decode stream's sample/commit boundary.
+
+        Commits run in *plan order* (the order ``pairs`` carries), not
+        slot order: request finishes free pages through the allocator's
+        LIFO free list, so commit order is observable in later physical
+        page assignment — plan order is what the synchronous loop uses,
+        and following it keeps the async executor's allocator state
+        bitwise-identical, not just its tokens."""
         lg = np.asarray(logits)
         sel0 = np.asarray(sel[0])                    # layer-0 [R,KV,K]
         kv_l = self.cfg.n_kv_heads // self.tp        # KV heads per shard
-        for i, req in enumerate(rows):
+        for slot, req in pairs:
             frontier = req.computed == req.total_len - 1
             req.computed += 1
             self.stats.decode_tokens += 1
@@ -983,15 +1051,17 @@ class PagedEngine:
                 # data fetched) — drop those from the traffic record.
                 # Under TP the event is tagged with the shard whose KV
                 # heads produced it (heads shard in contiguous slices).
-                for h, head_sel in enumerate(sel0[i]):
+                for h, head_sel in enumerate(sel0[slot]):
                     self.recorder.record(
                         head_sel[head_sel != NULL_PAGE],
                         rid=req.rid, step=self.now,
                         shard=h // kv_l if self.tp > 1 else -1,
                         tier=capture.TIER_HBM)
             if frontier:
-                req.out_tokens.append(int(lg[i].argmax()))
-                req.last_logits = lg[i].copy()
+                req.out_tokens.append(int(lg[slot].argmax()))
+                req.last_logits = lg[slot].copy()
+                req.last_token_at = self.now
+                req.token_ticks.append(self.now)
                 self.stats.tokens_out += 1
                 if req.resumed_at >= 0:
                     # resume-TTFT sample: re-admission (swap or
@@ -999,9 +1069,14 @@ class PagedEngine:
                     req.resume_gaps.append(self.now - req.resumed_at)
                     req.resumed_at = -1.0
                 self._finish_if_done(req)
-        self.stats.decode_rows_padded += rb - r_act
-        # NSB accounting over the iteration's unique physical pages
-        uniq = np.unique(sel0[:r_act])
+        self.stats.decode_rows_padded += rb - len(pairs)
+        # NSB accounting over the iteration's unique physical pages —
+        # indexed by occupied slots, so hole rows (all-NULL selections)
+        # never enter; np.unique sorts, making the touch order a
+        # function of the page *set* alone, identical however the
+        # executor placed rows
+        occ = np.asarray([slot for slot, _ in pairs], dtype=np.int64)
+        uniq = np.unique(sel0[occ])
         uniq = uniq[uniq != NULL_PAGE]
         self._seen_pages.update(int(p) for p in uniq)
         self.stats.pages_unique = len(self._seen_pages)
@@ -1019,7 +1094,7 @@ class PagedEngine:
         if self.hot_shards is not None:
             # per-shard NSBs see only their own KV heads' selections
             for s in range(self.tp):
-                su = np.unique(sel0[:r_act, s * kv_l:(s + 1) * kv_l])
+                su = np.unique(sel0[occ][:, s * kv_l:(s + 1) * kv_l])
                 for p in su[su != NULL_PAGE]:
                     self.hot_shards.touch(int(p), s)
                     if self.tier_shards is not None:
@@ -1027,14 +1102,37 @@ class PagedEngine:
         if self._predictor is not None:
             # per-request history for the next prediction round (layer-0
             # selections — the repo's traffic-proxy convention)
-            for i, req in enumerate(rows):
-                rp = np.unique(sel0[i])
+            for slot, req in pairs:
+                rp = np.unique(sel0[slot])
                 self._predictor.observe(req.rid, rp[rp != NULL_PAGE])
+
+    def _run_decode(self, rows: list, bucket: int = 0) -> None:
+        # ragged batches pad to the scheduler's power-of-two row bucket
+        # (NULL block tables, scratch-page scribbles) instead of always
+        # to max_batch: O(log R_max) distinct decode traces, and the
+        # padded compute shrinks with the actual batch
+        rb = bucket or self.max_batch
+        pairs = list(enumerate(rows))
+        logits, sel = self._dispatch_decode(pairs, rb)
+        self._commit_decode(pairs, logits, sel, rb)
 
     # -- iteration loop ------------------------------------------------------
 
     def step(self) -> int:
         """One scheduler iteration; returns scheduled token count.
+
+        Dispatches to the pipelined executor when constructed with
+        ``executor="async"`` (see :mod:`.executor`); the synchronous
+        loop below is the bitwise parity oracle both paths answer to.
+        """
+        if self._pipeline is not None:
+            return self._pipeline.step()
+        return self._step_sync()
+
+    def _step_sync(self) -> int:
+        """The synchronous step loop: schedule, drain transfers, run
+        prefill then decode to completion, then the runahead stage —
+        every phase strictly ordered on the host.
 
         With runahead on, the iteration ends with the speculative
         stage: predict each live request's next-iteration TopK pages
@@ -1066,10 +1164,23 @@ class PagedEngine:
             self.stats.steps += 1
         if self._tier is not None and plan.runahead_budget > 0:
             self._run_runahead(plan)
+        self._account_streams(plan)
         self.stats.preemptions = self.scheduler.n_preemptions
         return plan.n_tokens
 
-    def _run_runahead(self, plan) -> None:
+    def _account_streams(self, plan) -> None:
+        """Per-stream iteration accounting, shared by both executors so
+        their iteration logs compare like with like."""
+        n_p, n_d = len(plan.prefill), len(plan.decode)
+        if n_p:
+            self.stats.prefill_iterations += 1
+        if n_d:
+            self.stats.decode_iterations += 1
+        if n_p and n_d:
+            self.stats.overlap_iterations += 1
+        self.stats.iter_log.append((n_p, n_d))
+
+    def _run_runahead(self, plan, fetched=_FETCH_UNSET) -> None:
         """The between-steps runahead stage: predict, filter, stage.
 
         Candidates are every request decoding next iteration — the
@@ -1081,6 +1192,11 @@ class PagedEngine:
         the pool tail via one fixed-shape donated gather.  Everything
         here is speculative: it steers where bytes are *read from*
         next iteration, never what is computed.
+
+        ``fetched``: the pipelined executor performs :meth:`_fetch_back`
+        in its overlap window (while the device drains the dispatched
+        streams) and passes the result here; the synchronous loop leaves
+        it unset and fetch-back runs inline.
         """
         tier, pred = self._tier, self._predictor
         pages: list = []
@@ -1088,7 +1204,8 @@ class PagedEngine:
         # window (host -> HBM), and its remapped history pages go to
         # the *front* of the staging list (HBM -> NSB) — so the first
         # post-resume demand gather never touches a host page
-        fetched = self._fetch_back()
+        if fetched is _FETCH_UNSET:
+            fetched = self._fetch_back()
         if fetched is not None and not fetched.done:
             hist = list(pred.history(fetched.rid))
             pages.extend(hist)
@@ -1239,8 +1356,12 @@ class PagedEngine:
     def metrics(self) -> dict:
         done = [r for r in self.requests.values()
                 if r.finished_at >= 0]
-        lat = [r.latency() for r in done]
-        ttft = [r.ttft() for r in done]
+        # the accessors are None-guarded (an unfinished request has no
+        # latency, a one-token request no inter-token gap): filter, so
+        # percentiles never mix sentinel negatives into the tail
+        lat = [x for x in (r.latency() for r in done) if x is not None]
+        ttft = [x for x in (r.ttft() for r in done) if x is not None]
+        tpot = [x for x in (r.tpot() for r in done) if x is not None]
         out = {
             "n_finished": len(done),
             "iterations": self.stats.iterations,
@@ -1249,6 +1370,15 @@ class PagedEngine:
             "p99_latency": percentile(lat, 0.99),
             "p50_ttft": percentile(ttft, 0.50),
             "p99_ttft": percentile(ttft, 0.99),
+            "p50_tpot": percentile(tpot, 0.50),
+            "p99_tpot": percentile(tpot, 0.99),
+            "executor": self.executor,
+            "prefill_iterations": self.stats.prefill_iterations,
+            "decode_iterations": self.stats.decode_iterations,
+            "overlap_iterations": self.stats.overlap_iterations,
+            "overlap_fraction": (
+                self.stats.overlap_iterations / self.stats.iterations
+                if self.stats.iterations else None),
             "nsb_hot_hit_rate": self.stats.hot_hit_rate,
             "offchip_fetch_reduction": self.stats.offchip_reduction,
             "tp": self.tp,
@@ -1266,6 +1396,13 @@ class PagedEngine:
             "n_prefill_traces": self.n_prefill_traces(),
             "decode_rows_padded": self.stats.decode_rows_padded,
         }
+        # double-buffered plan quality (async executor; zeros under sync)
+        sch = self.scheduler
+        out["plan_commits"] = sch.plan_commits
+        out["plan_repairs"] = sch.plan_repairs
+        out["plan_reuse_fraction"] = (
+            sch.plan_reuse / sch.plan_commits if sch.plan_commits
+            else None)
         # resume-TTFT: re-admission to next new token, both policies —
         # the swap-vs-recompute headline spill_bench compares
         gaps = [g for r in self.requests.values() for g in r.resume_gaps]

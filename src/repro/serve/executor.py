@@ -1,0 +1,141 @@
+"""Pipelined executor: disaggregated prefill/decode streams over one
+:class:`~repro.serve.engine.PagedEngine`.
+
+The synchronous step loop (``PagedEngine._step_sync``) is a strictly
+ordered host program: schedule, drain transfers, run every prefill chunk
+to completion, run the decode batch to completion, then the runahead
+stage.  Each "run" hides a host sync — ``np.asarray(logits)`` blocks
+until the device drains — so one long prompt's chunks serialise in front
+of every decoding user's next token, and the runahead/spill transfers
+run *after* compute instead of under it.  The paper's framing is the
+mirror image: vector runahead works because it is a decoupled sub-thread
+executing concurrently with the NPU's demand stream.
+
+This module restructures the same iteration into dispatch / overlap /
+commit:
+
+- **dispatch**: every prefill chunk and the decode batch are *issued*
+  (jit calls return device futures; JAX dispatch is asynchronous) before
+  anything is materialised.  The two streams' pool writes cannot race —
+  donated pools chain functionally through each call, so device-side
+  execution is ordered by dataflow (an SSA chain of pool versions) even
+  though the host no longer waits between calls.
+- **overlap window**: with both streams in flight, the host performs the
+  work the sync loop did serially — the spilled-queue-head fetch-back
+  (host->HBM restore) and the *speculative* schedule for iteration N+1
+  (``Scheduler.schedule_speculative``, a shadow-state draft that
+  allocates nothing).
+- **commit**: materialise the prefill logits in job order, then the
+  decode logits, sampling tokens and finishing requests in **plan
+  order** — the exact mutation order the sync loop performs — then run
+  the runahead stage against post-commit state.
+
+Why the result is bitwise-identical to the sync loop: scheduling
+consumes only token counts and page-pool state, never sampled values, so
+the committed plan sequence matches sync's; decode rows are independent
+(a request's logits do not depend on which row carries it — hole rows
+are exactly the NULL padding rows the bucketed sync path already
+computes); and commits replay sync's mutation order, so the allocator's
+LIFO free list, the prefix trie, and the NSB tier all evolve
+identically.  The one sanctioned divergence: with a spill tier, the
+overlap-window fetch-back sees pre-commit pool occupancy (the sync loop
+ran it post-commit), so a swap-resume can land an iteration apart and
+the *timelines* may differ — per-request tokens and logits still cannot
+(teacher-forced replay and block-table addressing make them
+schedule-independent; see ``tests/test_serve.py``'s parity suite).
+
+Per-slot insertion (the maxtext continuous-batching idiom): each running
+request keeps a persistent decode row across iterations; a freshly
+prefilled request drops into the lowest free slot rather than reshuffling
+the batch.  Slots only compact when the power-of-two row bucket shrinks
+below an occupied slot.
+"""
+
+from __future__ import annotations
+
+
+class PipelinedExecutor:
+    """Drives one engine iteration as dispatch -> overlap -> commit."""
+
+    def __init__(self, engine) -> None:
+        self.engine = engine
+        self._spec = None              # draft plan for the next iteration
+        self._slots: dict[int, int] = {}   # rid -> persistent decode row
+
+    def _assign_slots(self, plan, rb: int) -> list:
+        """Map the plan's decode rows onto persistent slots; returns
+        ``(slot, request)`` pairs **in plan order** (commit order must
+        match the sync loop — see ``_commit_decode``).
+
+        Rows vacated since last iteration (finish, preemption, budget
+        deferral) free their slots; entrants take the lowest free slot.
+        If the bucket shrank below an occupied slot, compact preserving
+        relative order — the one case a request's row can move, and row
+        placement is logit-invariant either way."""
+        live = {r.rid for r in plan.decode}
+        for rid in [rid for rid in self._slots if rid not in live]:
+            del self._slots[rid]
+        used = set(self._slots.values())
+        for req in plan.decode:
+            if req.rid not in self._slots:
+                slot = 0
+                while slot in used:
+                    slot += 1
+                self._slots[req.rid] = slot
+                used.add(slot)
+        if used and max(used) >= rb:
+            order = sorted(self._slots, key=self._slots.get)
+            self._slots = {rid: i for i, rid in enumerate(order)}
+        return [(self._slots[req.rid], req) for req in plan.decode]
+
+    def step(self) -> int:
+        """One pipelined iteration; returns scheduled token count."""
+        eng = self.engine
+        eng.now += 1
+        eng.stats.iterations += 1
+        # commit the double-buffered draft: revalidate against post-step
+        # state, then run the authoritative schedule (the plan the sync
+        # loop would build at this now)
+        plan = eng.scheduler.commit(self._spec, eng.now)
+        self._spec = None
+        # iteration-boundary drains keep PR 7's strict transfer order:
+        # snapshot reads (swap-outs) before any pool write, staged-copy
+        # invalidations for released pages, COW copies, restores last
+        eng._apply_spill_outs()
+        if eng._tier is not None:
+            eng._tier.invalidate(eng.allocator.drain_released())
+        eng._apply_cow_copies()
+        eng._apply_swap_ins()
+        # -- dispatch: issue both streams, materialise neither ---------
+        prefills = [(job, eng._dispatch_prefill(job))
+                    for job in plan.prefill]
+        rb = plan.decode_bucket or eng.max_batch
+        pairs: list = []
+        decode_out = None
+        if plan.decode:
+            pairs = self._assign_slots(plan, rb)
+            decode_out = eng._dispatch_decode(pairs, rb)
+        # -- overlap window: device drains, host works ahead -----------
+        fetched = None
+        run_stage = eng._tier is not None and plan.runahead_budget > 0
+        if run_stage:
+            # the spilled queue head's host->HBM restore rides under the
+            # in-flight compute (pool dataflow orders it after); it sees
+            # pre-commit occupancy — the sanctioned timeline divergence
+            fetched = eng._fetch_back()
+        # draft iteration N+1 while N executes: shadow-state schedule
+        # seeded with the in-flight plan's count evolution
+        self._spec = eng.scheduler.schedule_speculative(
+            eng.now + 1, in_flight=plan)
+        # -- commit: sample and mutate in the sync loop's order --------
+        for job, logits in prefills:
+            eng._commit_prefill(job, logits)
+        if decode_out is not None:
+            logits, sel = decode_out
+            eng._commit_decode(pairs, logits, sel, rb)
+            eng.stats.steps += 1
+        if run_stage:
+            eng._run_runahead(plan, fetched=fetched)
+        eng._account_streams(plan)
+        eng.stats.preemptions = eng.scheduler.n_preemptions
+        return plan.n_tokens

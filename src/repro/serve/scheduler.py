@@ -64,6 +64,7 @@ Arrivals come from :class:`PoissonArrivals` (open-loop load generator) or
 
 from __future__ import annotations
 
+import copy
 import enum
 from collections import deque
 from dataclasses import dataclass, field
@@ -111,6 +112,8 @@ class Request:
     spilled: bool = False           # snapshot lives in the host spill tier
     resumed_at: float = -1.0        # last re-admission after a preemption
     resume_gaps: list = field(default_factory=list)  # resume -> next token
+    last_token_at: float = -1.0     # most recent emitted-token tick
+    token_ticks: list = field(default_factory=list)  # tick per emitted token
 
     @property
     def prompt_len(self) -> int:
@@ -135,11 +138,33 @@ class Request:
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
 
-    def latency(self) -> float:
+    def latency(self) -> float | None:
+        """End-to-end latency in scheduler ticks; None until finished.
+
+        The guards on all three latency accessors matter for percentile
+        honesty: the timestamps initialise to ``-1.0`` sentinels, so an
+        unguarded accessor on an unfinished request returns a *negative*
+        duration that silently drags percentiles taken over
+        ``requests.values()`` toward zero."""
+        if self.finished_at < 0:
+            return None
         return self.finished_at - self.arrival
 
-    def ttft(self) -> float:
+    def ttft(self) -> float | None:
+        """Time to first token; None until the first token exists."""
+        if self.first_token_at < 0:
+            return None
         return self.first_token_at - self.arrival
+
+    def tpot(self) -> float | None:
+        """Mean inter-token gap after the first token (time per output
+        token, the decode-stream latency metric); None until a second
+        token exists — a one-token request has no inter-token gap."""
+        if (self.first_token_at < 0 or self.last_token_at < 0
+                or len(self.out_tokens) < 2):
+            return None
+        return ((self.last_token_at - self.first_token_at)
+                / (len(self.out_tokens) - 1))
 
 
 @dataclass
@@ -154,11 +179,24 @@ class IterationPlan:
     decode: list = field(default_factory=list)      # [Request]
     prefill: list = field(default_factory=list)     # [PrefillJob]
     decode_bucket: int = 0    # padded decode rows (0 = engine default)
-    runahead_budget: int = 0  # staging copies granted this iteration
+    runahead_budget: int = 0  # decode-stream staging copies this iteration
+    speculative: bool = False  # built by schedule_speculative: shadow
+    #                            requests, no real allocations — must pass
+    #                            through Scheduler.commit before dispatch
+    for_now: float = -1.0     # the tick the plan was built for
 
     @property
     def n_tokens(self) -> int:
         return len(self.decode) + sum(j.n_tokens for j in self.prefill)
+
+    def signature(self) -> tuple:
+        """Order-sensitive identity of the schedule decision: what the
+        plan would dispatch, by rid — the unit ``Scheduler.commit``
+        compares a speculative draft against the authoritative plan."""
+        return (tuple(r.rid for r in self.decode),
+                tuple((j.req.rid, j.start, j.n_tokens)
+                      for j in self.prefill),
+                self.decode_bucket, self.runahead_budget)
 
 
 def row_buckets(max_rows: int) -> tuple[int, ...]:
@@ -241,8 +279,10 @@ class Scheduler:
         self.chunk = chunk
         self.token_budget = max(token_budget, 1)
         self.max_running = max_running or max_batch
-        # staging copies the runahead stage may issue per iteration;
-        # 0 disables (the plan then never grants a budget)
+        # runahead_pages: staging copies granted to the *decode stream*
+        # per iteration it runs; 0 disables (the plan then never grants
+        # a budget).  The grant is per-stream and independent of
+        # co-scheduled prefill — see schedule() for the rationale.
         self.runahead_pages = runahead_pages
         # bucket-aware planning: when the engine pads decode batches to
         # power-of-two buckets, the padded slots cost the same jitted
@@ -257,6 +297,11 @@ class Scheduler:
         self.n_swap_outs = 0              # preemptions served by spill
         self.n_swap_ins = 0               # resumes served by restore
         self.prefill_tokens_skipped = 0   # prefix-cache fast-forwards
+        # double-buffered plan accounting (the pipelined executor's
+        # schedule_speculative/commit cycle)
+        self.plan_commits = 0             # speculative plans committed
+        self.plan_reuse = 0               # drafts that matched commit
+        self.plan_repairs = 0             # drafts with dead rids dropped
 
     # -- queue interface -----------------------------------------------------
 
@@ -398,13 +443,16 @@ class Scheduler:
             self._fill_bucket(plan)
             plan.decode_bucket = bucket_for(len(plan.decode),
                                             self.row_buckets)
-        # runahead staging budget: full when the iteration is pure
-        # decode (staging DMAs overlap device compute for free), halved
-        # when prefill chunks share the iteration's memory bandwidth,
-        # zero when there is nothing decoding to predict for
+        # runahead staging budget is *per stream*: the decode stream is
+        # granted the full ``runahead_pages`` whenever it runs, zero when
+        # nothing decodes (no selection to predict for).  Prefill no
+        # longer halves the grant — under the pipelined executor prefill
+        # chunks dispatch on their own stream, so a co-scheduled long
+        # prompt does not contend with the decode stream's staging
+        # window the way the pre-disaggregation serial loop did.
         if self.runahead_pages > 0 and plan.decode:
-            plan.runahead_budget = (self.runahead_pages if not plan.prefill
-                                    else max(1, self.runahead_pages // 2))
+            plan.runahead_budget = self.runahead_pages
+        plan.for_now = now
         return plan
 
     def _fill_bucket(self, plan: IterationPlan) -> None:
@@ -427,6 +475,117 @@ class Scheduler:
             if not self.allocator.ensure(req.rid, req.computed + 1):
                 continue
             plan.decode.append(req)
+
+    # -- double-buffered plans (pipelined executor) --------------------------
+
+    def schedule_speculative(self, now: float,
+                             in_flight: IterationPlan | None = None
+                             ) -> IterationPlan:
+        """Build iteration ``now``'s plan as a *draft*, without mutating
+        any real scheduler or allocator state.
+
+        This is the overlap-window half of the double buffer: the
+        pipelined executor calls it while the device is still executing
+        the ``in_flight`` plan's prefill/decode streams, so the host
+        builds plan N+1 under step N.  The draft is computed on a deep
+        shadow copy of the scheduler (allocator included; immutable
+        request arrays are shared, never copied), after replaying the
+        *count evolution* the in-flight step will commit — every decode
+        row's frontier advances one position, frontier rows emit a
+        token, prefill completions emit their first token, and requests
+        that reach their token budget finish and free their pages.
+        Scheduling decisions depend only on token counts and page-pool
+        state, never on sampled token values, so when no new request
+        arrives between draft and commit the draft is exact.
+
+        Call this *after* the in-flight plan's prefill chunks have been
+        dispatched (their ``computed`` advance happens at dispatch) and
+        before the step's sample/commit boundary.  The returned plan
+        references shadow requests and holds no real allocations — it
+        must go through :meth:`commit` before anything dispatches it.
+        """
+        # share the immutable per-request arrays: prompts are never
+        # mutated and last_logits only rebound, so the shadow can alias
+        # them instead of copying megabytes per draft
+        memo: dict = {}
+        for req in list(self.running) + list(self.waiting):
+            memo[id(req.prompt)] = req.prompt
+            if req.last_logits is not None:
+                memo[id(req.last_logits)] = req.last_logits
+        shadow = copy.deepcopy(self, memo)
+        if in_flight is not None:
+            by_rid = {r.rid: r for r in shadow.running}
+            # decode stream: each row's frontier advances; frontier rows
+            # emit (token value irrelevant to scheduling), finished rows
+            # release their pages exactly as the commit will
+            for row in in_flight.decode:
+                r = by_rid.get(row.rid)
+                if r is None:
+                    continue
+                frontier = r.computed == r.total_len - 1
+                r.computed += 1
+                if frontier:
+                    r.out_tokens.append(0)
+                    if r.done:
+                        shadow.finish(r, now)
+            # prefill stream: ``computed`` already advanced at dispatch
+            # time (mirroring the engine), so only the completion
+            # emission remains to simulate
+            for job in in_flight.prefill:
+                r = by_rid.get(job.req.rid)
+                if r is None or r.computed < r.prompt_len or r.out_tokens:
+                    continue
+                r.out_tokens.append(0)
+                if r.done:
+                    shadow.finish(r, now)
+        plan = shadow.schedule(now)
+        plan.speculative = True
+        return plan
+
+    def commit(self, plan: IterationPlan | None,
+               now: float) -> IterationPlan:
+        """Revalidate a speculative draft against post-step state and
+        return the authoritative plan for iteration ``now``.
+
+        Revalidation drops draft rows whose request is no longer
+        running, finished, was preempted, or whose KV frontier moved
+        under the draft (a stale prefill start) — a speculative plan can
+        therefore never dispatch a dead rid or address an
+        un-materialised page.  The apply pass then runs the real
+        :meth:`schedule` (performing the draft's allocations,
+        admissions and preemptions against live state — the one place
+        pages actually move), and the committed plan is *by
+        construction* the plan the synchronous loop would have built,
+        which is what keeps the async executor's schedule, tokens and
+        logits bitwise-identical to the sync oracle.  The draft-vs-
+        commit match rate is tracked in ``plan_reuse``/``plan_commits``
+        (speculation quality; exact whenever no new arrival landed
+        between draft and commit).
+        """
+        draft_sig = None
+        if plan is not None and plan.speculative and plan.for_now == now:
+            self.plan_commits += 1
+            live = {r.rid: r for r in self.running}
+            kept_d, kept_p = [], []
+            for r in plan.decode:
+                real = live.get(r.rid)
+                if (real is not None and not real.in_prefill
+                        and not real.done):
+                    kept_d.append(r)
+            for j in plan.prefill:
+                real = live.get(j.req.rid)
+                if (real is not None and real.in_prefill
+                        and j.start == real.computed):
+                    kept_p.append(j)
+            if len(kept_d) != len(plan.decode) \
+                    or len(kept_p) != len(plan.prefill):
+                self.plan_repairs += 1
+            plan.decode, plan.prefill = kept_d, kept_p
+            draft_sig = plan.signature()
+        committed = self.schedule(now)
+        if draft_sig is not None and draft_sig == committed.signature():
+            self.plan_reuse += 1
+        return committed
 
     def finish(self, req: Request, now: float) -> None:
         req.state = RequestState.FINISHED

@@ -319,6 +319,110 @@ def test_scheduler_plan_invariants(reqs, pool, max_batch, budget,
 
 
 @SET
+@given(
+    st.lists(st.tuples(st.integers(1, 24),       # prompt_len
+                       st.integers(1, 6),        # max_new_tokens
+                       st.integers(0, 10)),      # arrival tick
+            min_size=1, max_size=8),
+    st.integers(6, 16),                        # allocatable pool pages
+    st.integers(1, 8),                         # max_batch
+    st.integers(1, 24),                        # token budget
+    st.booleans(),                             # row bucketing on/off
+)
+def test_overlapped_schedule_machine(reqs, pool, max_batch, budget,
+                                     buckets_on):
+    """Random workloads through the pipelined executor's double-buffer
+    cycle (``schedule_speculative`` in the overlap window, ``commit`` at
+    the next iteration boundary) with a fake count-model driving the
+    same dispatch/commit split the engine performs.
+
+    * ``schedule_speculative`` is pure: no real scheduler or allocator
+      state moves while the draft is built (the draft runs on shadow
+      state — a page it "allocates" must not exist),
+    * a committed plan never contains a finished or preempted rid, and
+      never plans a prefill chunk from a stale KV frontier,
+    * the committed plan obeys the same token-budget bound as the
+      synchronous scheduler (buckets may ride top-up rows over it),
+    * page conservation holds across every commit boundary, and the
+      machine drains: all requests finish and release every page.
+    """
+    al = KVBlockAllocator(n_pages=pool + 1, page_tokens=4)
+    bks = row_buckets(max_batch) if buckets_on else ()
+    s = Scheduler(al, max_batch=max_batch, chunk=4, token_budget=budget,
+                  row_buckets=bks)
+    live = []
+    for rid, (plen, gen, tick) in enumerate(reqs):
+        while al.pages_for_tokens(plen + gen) > al.capacity:
+            plen = max(1, plen // 2)
+            gen = max(1, gen - 1)
+        live.append((tick, Request(rid=rid, prompt=np.arange(plen),
+                                   max_new_tokens=gen,
+                                   arrival=float(tick))))
+    live.sort(key=lambda x: (x[0], x[1].rid))
+    pending = list(live)
+
+    def fingerprint():
+        return (al.pages_in_use, al.pages_free, s.n_preemptions,
+                tuple((r.rid, r.computed, len(r.out_tokens))
+                      for r in s.running),
+                tuple(r.rid for r in s.waiting))
+
+    spec = None
+    for now in range(400):
+        while pending and pending[0][0] <= now:
+            s.add(pending.pop(0)[1])
+        plan = s.commit(spec, float(now))
+        # -- committed plan references only live, consistent requests
+        running = {r.rid: r for r in s.running}
+        for r in plan.decode:
+            assert r.rid in running, "committed plan holds a dead rid"
+            assert not r.done and not r.in_prefill
+        for j in plan.prefill:
+            assert j.req.rid in running, "committed plan holds a dead rid"
+            assert j.start == j.req.computed, "stale prefill frontier"
+        # -- budget bound post-commit, same contract as schedule()
+        if bks and plan.decode:
+            assert plan.n_tokens <= budget + plan.decode_bucket - 1
+        else:
+            assert plan.n_tokens <= budget
+        # dispatch phase: prefill frontiers advance before the draft is
+        # taken, exactly as the engine dispatches chunks pre-overlap
+        for job in plan.prefill:
+            job.req.computed += job.n_tokens
+        # overlap window: draft N+1 on shadow state — must be pure
+        before = fingerprint()
+        spec = s.schedule_speculative(float(now) + 1.0, in_flight=plan)
+        assert fingerprint() == before, \
+            "speculative schedule mutated real state"
+        assert spec.speculative and spec.for_now == float(now) + 1.0
+        # commit phase: emissions and finishes, sync mutation order
+        for job in plan.prefill:
+            if job.req.computed == job.req.prompt_len \
+                    and not job.req.out_tokens:
+                job.req.out_tokens.append(0)
+                job.req.first_token_at = float(now)
+                if job.req.done:
+                    s.finish(job.req, float(now))
+        for req in plan.decode:
+            frontier = req.computed == req.total_len - 1
+            req.computed += 1
+            if frontier:
+                req.out_tokens.append(0)
+                if req.done:
+                    s.finish(req, float(now))
+        # -- page conservation across the commit boundary
+        assert al.pages_in_use + al.pages_free == al.capacity
+        if not pending and not s.has_work:
+            break
+    assert not s.has_work, "overlapped machine failed to drain"
+    for _, r in live:
+        assert r.state is RequestState.FINISHED
+        assert len(r.out_tokens) == r.max_new_tokens
+    assert al.pages_in_use == 0
+    assert s.plan_commits > 0
+
+
+@SET
 @given(st.lists(st.integers(0, 1000), min_size=2, max_size=100))
 def test_dram_fifo_monotonic(addrs):
     """DRAM completion times are monotone for same-time issues (FIFO)."""

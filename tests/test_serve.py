@@ -873,3 +873,279 @@ class TestRunahead:
         assert "runahead_staged_pages" not in m
         # the demand pools carry no staging tail when runahead is off
         assert eng.k_pool.shape[1] == eng.n_pages
+
+
+class TestLatencyAccessors:
+    """TTFT/TPOT/latency guards: -1.0 sentinels must surface as None,
+    never as negative durations that drag percentiles toward zero."""
+
+    def test_unstarted_request_returns_none(self):
+        r = _mk(0, 8, 4, arrival=3.0)
+        assert r.latency() is None
+        assert r.ttft() is None
+        assert r.tpot() is None
+
+    def test_one_token_request_has_no_tpot(self):
+        r = _mk(0, 8, 1, arrival=0.0)
+        r.out_tokens = [5]
+        r.first_token_at = 2.0
+        r.last_token_at = 2.0
+        r.finished_at = 2.0
+        assert r.ttft() == 2.0 and r.latency() == 2.0
+        assert r.tpot() is None          # no inter-token gap exists
+
+    def test_tpot_is_mean_inter_token_gap(self):
+        r = _mk(0, 8, 4, arrival=1.0)
+        r.out_tokens = [1, 2, 3, 4]
+        r.first_token_at = 3.0
+        r.last_token_at = 9.0            # 3 gaps over 6 ticks
+        assert r.tpot() == pytest.approx(2.0)
+
+    def test_metrics_percentiles_skip_unfinished(self):
+        # an unfinished request contributes nothing (None filtered),
+        # instead of a negative sentinel duration
+        from repro.serve.engine import percentile
+        rs = [_mk(i, 8, 2) for i in range(3)]
+        rs[0].first_token_at = 2.0
+        rs[0].finished_at = 4.0
+        vals = [x for x in (r.latency() for r in rs) if x is not None]
+        assert vals == [4.0]
+        assert percentile(vals, 0.99) == 4.0
+
+
+class TestPerStreamRunaheadBudget:
+    """The staging budget is a decode-stream grant: co-scheduled prefill
+    no longer halves it (the streams are disaggregated)."""
+
+    def test_full_budget_with_prefill_in_iteration(self):
+        al = KVBlockAllocator(n_pages=33, page_tokens=4)
+        s = Scheduler(al, max_batch=4, chunk=4, token_budget=16,
+                      runahead_pages=8)
+        decoding = _mk(0, 4, 4)
+        s.add(decoding)
+        _drive(s, 1.0)                       # prefill completes
+        s.add(_mk(1, 12, 2))                 # long prompt joins
+        plan = s.schedule(2.0)
+        assert plan.decode and plan.prefill  # mixed iteration
+        assert plan.runahead_budget == 8     # full, not halved
+
+    def test_no_budget_without_decode(self):
+        al = KVBlockAllocator(n_pages=33, page_tokens=4)
+        s = Scheduler(al, max_batch=4, chunk=4, token_budget=16,
+                      runahead_pages=8)
+        s.add(_mk(0, 12, 2))
+        plan = s.schedule(1.0)
+        assert plan.prefill and not plan.decode
+        assert plan.runahead_budget == 0     # nothing to predict for
+
+
+class TestPlanDoubleBuffer:
+    """Scheduler.schedule_speculative / commit: the draft-commit cycle
+    the pipelined executor runs every iteration."""
+
+    def _sched(self, **kw):
+        al = KVBlockAllocator(n_pages=33, page_tokens=4)
+        kw.setdefault("max_batch", 4)
+        kw.setdefault("chunk", 4)
+        kw.setdefault("token_budget", 16)
+        return Scheduler(al, **kw), al
+
+    def test_commit_none_is_plain_schedule(self):
+        s, _ = self._sched()
+        s.add(_mk(0, 8, 2))
+        plan = s.commit(None, 1.0)
+        assert plan.prefill and not plan.speculative
+        assert s.plan_commits == 0           # nothing was speculated
+
+    def test_speculative_plan_allocates_nothing(self):
+        s, al = self._sched()
+        s.add(_mk(0, 8, 2))
+        in_use = al.pages_in_use
+        spec = s.schedule_speculative(1.0)
+        assert spec.speculative and spec.prefill
+        assert al.pages_in_use == in_use     # draft ran on shadow state
+        assert not s.running                 # no real admission happened
+
+    def test_commit_drops_finished_rid(self):
+        s, _ = self._sched()
+        r0, r1 = _mk(0, 4, 1), _mk(1, 4, 3)
+        s.add(r0)
+        s.add(r1)
+        plan = s.commit(None, 1.0)           # both prefill fully
+        for job in plan.prefill:
+            job.req.computed += job.n_tokens
+        spec = s.schedule_speculative(2.0, in_flight=plan)
+        # commit-phase: both emit; r0 (max_new=1) finishes
+        for job in plan.prefill:
+            job.req.out_tokens.append(0)
+            if job.req.done:
+                s.finish(job.req, 1.0)
+        committed = s.commit(spec, 2.0)
+        assert r0.rid not in {r.rid for r in committed.decode}
+        assert r1.rid in {r.rid for r in committed.decode}
+        assert s.plan_commits == 1
+
+    def test_exact_speculation_counts_as_reuse(self):
+        s, _ = self._sched()
+        s.add(_mk(0, 4, 4))
+        plan = s.commit(None, 1.0)
+        for _ in range(6):
+            for job in plan.prefill:
+                job.req.computed += job.n_tokens
+            spec = s.schedule_speculative(plan.for_now + 1.0,
+                                          in_flight=plan)
+            for job in plan.prefill:
+                if (job.req.computed == job.req.prompt_len
+                        and not job.req.out_tokens):
+                    job.req.out_tokens.append(0)
+                    if job.req.done:
+                        s.finish(job.req, plan.for_now)
+            for req in plan.decode:
+                frontier = req.computed == req.total_len - 1
+                req.computed += 1
+                if frontier:
+                    req.out_tokens.append(0)
+                    if req.done:
+                        s.finish(req, plan.for_now)
+            if not s.has_work:
+                break
+            plan = s.commit(spec, plan.for_now + 1.0)
+        # no arrivals between draft and commit: every draft was exact
+        assert s.plan_commits > 0
+        assert s.plan_reuse == s.plan_commits
+        assert s.plan_repairs == 0
+
+    def test_stale_draft_is_ignored(self):
+        s, _ = self._sched()
+        s.add(_mk(0, 8, 2))
+        spec = s.schedule_speculative(1.0)
+        # committed at a different tick than the draft was built for
+        s.commit(spec, 5.0)
+        assert s.plan_commits == 0
+
+
+@pytest.mark.slow
+class TestPipelinedExecutor:
+    """Acceptance for the pipelined executor: tokens and logits are
+    bitwise-identical to the synchronous loop across plain runs,
+    preemption/resume, COW prefix attaches, and spill swap-back — while
+    the overlap metrics show the streams actually disaggregated."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import api
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(17)
+        sys_p = rng.integers(1, cfg.vocab, size=12)
+        work = []
+        for i in range(5):
+            if i % 2:
+                prompt = np.concatenate(
+                    [sys_p, rng.integers(1, cfg.vocab, size=3)])
+            else:
+                prompt = rng.integers(1, cfg.vocab, size=14)
+            work.append((float(i) * 0.5, prompt, 5))
+        return cfg, params, work
+
+    def _run(self, cfg, params, work, executor, **kw):
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, max_batch=4, chunk=8,
+                          nsb_pages=32, executor=executor, **kw)
+        eng.run([(t, p.copy(), g) for t, p, g in work])
+        return eng
+
+    def _assert_bitwise(self, a_eng, b_eng, why):
+        assert a_eng.requests.keys() == b_eng.requests.keys()
+        for rid in a_eng.requests:
+            a, b = a_eng.requests[rid], b_eng.requests[rid]
+            assert a.out_tokens == b.out_tokens, (why, rid)
+            assert np.array_equal(a.last_logits, b.last_logits), (why, rid)
+
+    def test_rejects_unknown_executor(self, setup):
+        cfg, params, _ = setup
+        from repro.serve.engine import PagedEngine
+
+        with pytest.raises(ValueError, match="executor"):
+            PagedEngine(cfg, params, max_len=48, executor="threads")
+
+    def test_bitwise_identical_plain_run(self, setup):
+        cfg, params, work = setup
+        sync = self._run(cfg, params, work, "sync")
+        pipe = self._run(cfg, params, work, "async")
+        self._assert_bitwise(sync, pipe, "plain")
+        # identical timelines too: same plans, same per-stream split
+        assert sync.stats.iter_log == pipe.stats.iter_log
+        m = pipe.metrics()
+        assert m["executor"] == "async"
+        assert m["plan_commits"] > 0
+        assert m["overlap_iterations"] > 0
+        assert m["overlap_fraction"] > 0.0
+        assert m["p99_tpot"] is not None and m["p99_tpot"] >= 1.0
+        assert sync.metrics()["executor"] == "sync"
+        assert sync.metrics()["plan_commits"] == 0
+
+    def test_bitwise_under_preemption_and_resume(self, setup):
+        cfg, params, work = setup
+        sync = self._run(cfg, params, work, "sync", n_pages=1 + 12)
+        pipe = self._run(cfg, params, work, "async", n_pages=1 + 12)
+        assert pipe.scheduler.n_preemptions > 0
+        self._assert_bitwise(sync, pipe, "preempt")
+        # recovered drafts show up as repairs, not wrong schedules
+        assert pipe.scheduler.plan_repairs > 0
+
+    def test_bitwise_with_cow_prefix_and_runahead(self, setup):
+        cfg, params, work = setup
+        sync = self._run(cfg, params, work, "sync", runahead="nvr",
+                         runahead_pages=8)
+        pipe = self._run(cfg, params, work, "async", runahead="nvr",
+                         runahead_pages=8)
+        assert pipe.allocator.stats.prefix_hits > 0
+        self._assert_bitwise(sync, pipe, "cow+runahead")
+        # identical plans -> identical staged-tier traffic
+        assert (sync.metrics()["runahead_staged_pages"]
+                == pipe.metrics()["runahead_staged_pages"])
+
+    def test_bitwise_with_spill_swap_back(self, setup):
+        """Fetch-back moves to the overlap window (pre-commit pool
+        occupancy): timelines may diverge from sync, tokens and logits
+        may not."""
+        cfg, params, work = setup
+        sync = self._run(cfg, params, work, "sync", n_pages=1 + 12,
+                         runahead="nvr", runahead_pages=8, spill_pages=16)
+        pipe = self._run(cfg, params, work, "async", n_pages=1 + 12,
+                         runahead="nvr", runahead_pages=8, spill_pages=16)
+        assert pipe.scheduler.n_swap_outs > 0
+        self._assert_bitwise(sync, pipe, "spill")
+        pipe.allocator.check_tier_invariants()
+
+    def test_slot_stability_across_iterations(self, setup):
+        """Per-slot insertion: a running request keeps its decode row
+        while others come and go (no batch reshuffle on entry)."""
+        cfg, params, work = setup
+        from repro.serve.engine import PagedEngine
+
+        eng = PagedEngine(cfg, params, max_len=48, max_batch=4, chunk=8,
+                          nsb_pages=32, executor="async")
+        slots_seen: dict = {}
+        eng.submit(np.arange(1, 9), max_new_tokens=6)
+        orig = eng._pipeline._assign_slots
+
+        def spy(plan, rb):
+            pairs = orig(plan, rb)
+            for slot, req in pairs:
+                slots_seen.setdefault(req.rid, set()).add(slot)
+            return pairs
+
+        eng._pipeline._assign_slots = spy
+        for t, p, g in [(2.0, np.arange(20, 34), 3)]:
+            eng.run([(t, p.copy(), g)])
+        # rid 0 decoded across the second request's entry/exit without
+        # ever moving rows (bucket never shrank below its slot)
+        assert slots_seen and all(len(s) == 1
+                                  for s in slots_seen.values())

@@ -94,12 +94,12 @@ for i in range(6):
                  np.concatenate([sys_prompts[i % 2], sfx]), 5))
 
 def run(mesh=None, n_pages=0, kernel="xla", capture=False,
-        runahead="off", spill=0):
+        runahead="off", spill=0, executor="sync"):
     eng = PagedEngine(cfg, params, max_len=48, n_pages=n_pages,
                       max_batch=4, chunk=8, nsb_pages=32, mesh=mesh,
                       kernel=kernel, capture_trace=capture,
                       runahead=runahead, runahead_pages=8,
-                      spill_pages=spill)
+                      spill_pages=spill, executor=executor)
     eng.run([(t, p.copy(), g) for t, p, g in work])
     return eng
 
@@ -347,3 +347,37 @@ print("TP2_COW_OK")
     r = run_py(code, n_dev=2)
     assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
     assert "TP2_COW_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_tp2_async_executor_bitwise():
+    """The pipelined executor composes with tensor parallelism: both
+    streams dispatch as shard_map jits over the KV-head-sharded pools,
+    the overlap-window fetch-back restores onto sharded pools, and the
+    async tp=2 engine stays bitwise-identical to the synchronous tp=1
+    oracle — calm, under forced preemption, and with runahead + spill."""
+    code = _COMMON + """
+base = run()                                   # sync, tp=1: the oracle
+mesh = make_serve_mesh(2)
+pipe = run(mesh=mesh, executor="async")
+assert_bitwise(base, pipe)
+m = pipe.metrics()
+assert m["tp"] == 2 and m["executor"] == "async"
+assert m["plan_commits"] > 0 and m["overlap_iterations"] > 0
+
+# forced preemption/resume: draft repairs recover, tokens stay bitwise
+tight = run(mesh=mesh, n_pages=1 + 9, executor="async")
+assert tight.scheduler.n_preemptions > 0
+assert_bitwise(base, tight)
+
+# runahead staging + spill fetch-back in the overlap window, sharded
+ra = run(mesh=mesh, n_pages=1 + 9, runahead="nvr", spill=16,
+         executor="async")
+assert ra.scheduler.n_swap_outs > 0
+assert_bitwise(base, ra)
+ra.allocator.check_tier_invariants()
+print("TP2_ASYNC_OK")
+"""
+    r = run_py(code, n_dev=2)
+    assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
+    assert "TP2_ASYNC_OK" in r.stdout
