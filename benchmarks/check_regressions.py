@@ -85,6 +85,14 @@ GATES: dict[str, dict[str, str]] = {
         "overlap_fraction": "higher",
         "plan_reuse_fraction": "higher",
     },
+    "moe_serve_bench": {
+        "expert_nsb_hit_rate_paged_router": "higher",
+        "expert_hit_rate_lift_router_vs_lru": "higher",
+        "expert_runahead_accuracy": "higher",
+        "modeled_stall_cycles_per_tok_paged_router": "lower",
+        "modeled_tok_throughput_gain_router_vs_lru": "higher",
+        "preemptions": "higher",     # the bench must keep covering eviction
+    },
 }
 
 

@@ -458,6 +458,17 @@ def overlap_bench():
     return _ov()
 
 
+def moe_serve_bench():
+    """Paged expert-weight streaming on a live MoE serve load: expert
+    tiles as pages with router-keyed runahead staging the predicted
+    tiles — bitwise token/logit parity dense=paged=paged+router (and
+    tp=2) asserted in-run, expert-tile NSB hit-rate lift over the
+    demand-LRU baseline, modeled stall gain (defined in
+    benchmarks/serve_bench.py; lazy import as above)."""
+    from .serve_bench import moe_serve_bench as _ms
+    return _ms()
+
+
 ALL = {
     "fig5_latency": fig5_latency,
     "fig6_prefetch": fig6_prefetch,
@@ -476,4 +487,5 @@ ALL = {
     "runahead_bench": runahead_bench,  # online runahead off/imp/nvr
     "spill_bench": spill_bench,        # host spill swap vs recompute
     "overlap_bench": overlap_bench,    # pipelined vs sync executor
+    "moe_serve_bench": moe_serve_bench,  # paged expert tiles + router RA
 }

@@ -11,7 +11,7 @@ the headline metrics (non-finite values nulled, keys sorted), the
 BENCH_SCALE it ran at, the git sha and the harness wall time — one
 stable file per bench that CI uploads and successive commits can diff.
 
-Beyond the paper figures, nine engineering benches ride along:
+Beyond the paper figures, ten engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -38,6 +38,11 @@ Beyond the paper figures, nine engineering benches ride along:
                       bitwise parity + identical iteration log asserted
                       in-run, TTFT/TPOT split per stream, modeled p99
                       TPOT improvement from stream overlap
+  moe_serve_bench   — paged expert-weight streaming on a live MoE serve
+                      load: expert tiles as pages, router-keyed runahead
+                      staging into the NSB tail — bitwise parity
+                      dense=paged=paged+router (and tp=2) asserted
+                      in-run, expert-tile hit-rate lift over demand-LRU
 
 CI gates the deterministic headline metrics against committed baselines
 (benchmarks/check_regressions.py; see benchmarks/README.md).

@@ -236,14 +236,28 @@ def moe_expert_stream(expert_ids, n_experts: int, d_model: int, d_ff: int,
                       name: str = "MoE-route") -> PageStream:
     """Convert an MoE routing decision into expert weight-tile traffic.
 
-    ``expert_ids`` are per-token routed experts (top-1 view of the routing
-    the MoE dispatch / ``group_tokens_by_expert`` consumes).  Tokens are
-    grouped per expert into ``block_t``-token blocks; each block streams a
-    ``tile_rows``-row tile of its expert's weight matrix — the
-    expert-blocked pattern of the paper's ST workload, but driven by real
-    routing instead of a synthetic zipf draw.
+    ``expert_ids`` is either ``[T]`` per-token routed experts (the top-1
+    view the MoE dispatch / ``group_tokens_by_expert`` consumes) or
+    ``[T, k]`` full top-k selections straight from the router
+    (``jax.lax.top_k`` output): each of the ``T*k`` (token, expert)
+    pairs demands its expert's weights, so a top-k matrix is the same
+    traffic as ``T*k`` top-1 tokens — the flattening below *is* the
+    semantics, not a shape accident.  Tokens are grouped per expert into
+    ``block_t``-token blocks; each block streams a ``tile_rows``-row
+    tile of its expert's weight matrix — the expert-blocked pattern of
+    the paper's ST workload, but driven by real routing instead of a
+    synthetic zipf draw.
     """
-    eids = np.asarray(expert_ids, dtype=np.int64).reshape(-1)
+    raw = np.asarray(expert_ids, dtype=np.int64)
+    if raw.ndim not in (1, 2):
+        raise ValueError(
+            f"expert_ids must be [T] top-1 or [T, k] top-k routed expert "
+            f"ids, got shape {raw.shape}")
+    eids = raw.reshape(-1)
+    if eids.size and (eids.min() < 0 or eids.max() >= n_experts):
+        raise ValueError(
+            f"routed expert ids must lie in [0, {n_experts}), got range "
+            f"[{eids.min()}, {eids.max()}]")
     stream = PageStream(name=name, n_rows=n_experts * d_ff,
                         row_bytes=d_model * dtype_bytes,
                         compute_per_row=16 * d_model / MAC_RATE)
@@ -260,6 +274,20 @@ def moe_expert_stream(expert_ids, n_experts: int, d_model: int, d_ff: int,
             rows = e * d_ff + start + np.arange(tile, dtype=np.int64)
             stream.record(rows)
     return stream
+
+
+def expert_page_stream(name: str, n_pages: int, tile_rows: int,
+                       d_model: int, dtype_bytes: int = 2) -> PageStream:
+    """Recorder for paged expert-weight serving: one row = one expert
+    weight tile page of the :class:`~repro.serve.expert_pool.ExpertPool`
+    physical id space (``[tile_rows, d_model]`` of one gate/up/down
+    plane).  Events are the tile pages one decode step's routing
+    demanded (``TIER_HBM``) or the runahead stage copied into the NSB
+    tail (``TIER_NSB``) — the expert twin of :func:`kv_page_stream`."""
+    row_bytes = tile_rows * d_model * dtype_bytes
+    comp = tile_rows * d_model / MAC_RATE      # one MAC per weight elem
+    return PageStream(name=name, n_rows=n_pages, row_bytes=row_bytes,
+                      compute_per_row=comp)
 
 
 class PageCache:

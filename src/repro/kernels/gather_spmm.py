@@ -34,9 +34,8 @@ def _spmm_kernel(cols_ref, vals_ref, dense_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def gather_spmm(cols: jax.Array, vals: jax.Array, dense: jax.Array, *,
-                block_n: int = 0, interpret: bool = True) -> jax.Array:
-    """ELL SpMM: cols/vals [M, J], dense [N_in, N] -> out [M, N] (f32)."""
+def _gather_spmm(cols: jax.Array, vals: jax.Array, dense: jax.Array, *,
+                 block_n: int, interpret: bool) -> jax.Array:
     m, j = cols.shape
     _, n = dense.shape
     bn = block_n or n
@@ -54,3 +53,18 @@ def gather_spmm(cols: jax.Array, vals: jax.Array, dense: jax.Array, *,
         _spmm_kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret)(cols.astype(jnp.int32), vals, dense)
+
+
+def gather_spmm(cols: jax.Array, vals: jax.Array, dense: jax.Array, *,
+                block_n: int = 0,
+                interpret: bool | None = None) -> jax.Array:
+    """ELL SpMM: cols/vals [M, J], dense [N_in, N] -> out [M, N] (f32).
+
+    ``interpret`` defaults to auto-detect (interpret mode off-TPU,
+    Mosaic on TPU), matching ``paged_decode_attn``.
+    """
+    from .ops import on_tpu       # deferred: ops re-exports this module
+    if interpret is None:
+        interpret = not on_tpu()
+    return _gather_spmm(cols, vals, dense, block_n=block_n,
+                        interpret=interpret)

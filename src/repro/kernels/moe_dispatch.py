@@ -7,6 +7,19 @@ sparse unit — is scalar-prefetched, so the expert weight tile for block
 ``t+1`` is DMA'd from HBM while block ``t`` is in the MXU.
 
 out[t_block] = x[t_block] @ W[group_id[t_block]]        (MegaBlocks-style)
+
+The *paged* variants (:func:`moe_paged_gateup` / :func:`moe_paged_down`)
+are the same mechanism one level deeper: expert weights no longer live as
+dense ``[E, D, F]`` cubes but as fixed row-tile pages in a physical
+expert-pool (``serve/expert_pool.py``), and the scalar-prefetched operand
+is the *resolved physical page id* per (token, routed expert, tile) —
+exactly ``paged_decode_attn``'s contract, with weight tiles instead of KV
+pages.  The pipeline double-buffers the indirect tile DMAs against the
+MXU: while tile ``t``'s GEMM runs, tile ``t+1``'s fetch is in flight.
+Pipeline depth = runahead depth.
+
+``interpret`` defaults to auto-detect (interpret mode off-TPU, Mosaic on
+TPU), matching ``paged_decode_attn``.
 """
 
 from __future__ import annotations
@@ -17,6 +30,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    # deferred import: ops.py re-exports this module's public API
+    from .ops import on_tpu
+    return (not on_tpu()) if interpret is None else interpret
 
 
 def _moe_kernel(gid_ref, x_ref, w_ref, out_ref, acc_ref, *, n_kblocks: int):
@@ -37,13 +56,9 @@ def _moe_kernel(gid_ref, x_ref, w_ref, out_ref, acc_ref, *, n_kblocks: int):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_f", "block_d",
                                              "interpret"))
-def moe_dispatch_matmul(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
-                        block_t: int = 0, block_f: int = 0, block_d: int = 0,
-                        interpret: bool = True) -> jax.Array:
-    """x [T, D] (expert-sorted, block-aligned), w [E, D, F] -> out [T, F].
-
-    group_ids: int32 [T // block_t] expert id per token block.
-    """
+def _moe_dispatch_matmul(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
+                         block_t: int, block_f: int, block_d: int,
+                         interpret: bool) -> jax.Array:
     t, d = x.shape
     e, _, f = w.shape
     bt = block_t or min(t, 128)
@@ -67,3 +82,153 @@ def moe_dispatch_matmul(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
         kern, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
         interpret=interpret)(group_ids.astype(jnp.int32), x, w)
+
+
+def moe_dispatch_matmul(group_ids: jax.Array, x: jax.Array, w: jax.Array, *,
+                        block_t: int = 0, block_f: int = 0, block_d: int = 0,
+                        interpret: bool | None = None) -> jax.Array:
+    """x [T, D] (expert-sorted, block-aligned), w [E, D, F] -> out [T, F].
+
+    group_ids: int32 [T // block_t] expert id per token block.
+    interpret: run the Pallas interpreter (defaults to True off-TPU).
+    """
+    return _moe_dispatch_matmul(group_ids, x, w, block_t=block_t,
+                                block_f=block_f, block_d=block_d,
+                                interpret=_resolve_interpret(interpret))
+
+
+# -- paged expert-tile GEMMs ---------------------------------------------------
+
+def _gateup_kernel(pid_ref, x_ref, w_ref, out_ref, acc_ref, *,
+                   n_dblocks: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # x tile [1, bd] x weight-page slice [tile_f, bd]^T -> [1, tile_f]
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(di == n_dblocks - 1)
+    def _fini():
+        out_ref[...] = acc_ref[...].reshape(out_ref.shape).astype(
+            out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _moe_paged_gateup(pids: jax.Array, x: jax.Array, pool: jax.Array, *,
+                      block_d: int, interpret: bool) -> jax.Array:
+    r, k, nt = pids.shape
+    _, d = x.shape
+    _, tile_f, dp = pool.shape
+    assert dp == d, f"pool row dim {dp} != x feature dim {d}"
+    bd = block_d or min(d, 512)
+    assert d % bd == 0
+    grid = (r, k, nt, d // bd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda ri, ji, ti, di, p: (ri, di)),
+            # the indirect tile DMA: the index map consults the
+            # prefetched physical page id, so tile (ti+1)'s fetch is in
+            # flight while tile ti is in the MXU
+            pl.BlockSpec((1, tile_f, bd),
+                         lambda ri, ji, ti, di, p: (p[ri, ji, ti], 0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile_f),
+                               lambda ri, ji, ti, di, p: (ri, ji, ti)),
+        scratch_shapes=[pltpu.VMEM((1, tile_f), jnp.float32)],
+    )
+    kern = functools.partial(_gateup_kernel, n_dblocks=d // bd)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, k, nt * tile_f), x.dtype),
+        interpret=interpret)(pids.astype(jnp.int32), x, pool)
+
+
+def moe_paged_gateup(pids: jax.Array, x: jax.Array, pool: jax.Array, *,
+                     block_d: int = 0,
+                     interpret: bool | None = None) -> jax.Array:
+    """Paged expert projection into the FFN hidden dim (gate / up).
+
+    pids: int32 [R, K, NT] resolved physical page ids — row tiles of the
+      routed expert's ``[F, D]`` weight plane, in tile order (the block
+      table lookup ``bt_l[plane][eids]`` already done by the caller, hot
+      tier remap included).
+    x: [R, D] one decode step's FFN inputs.
+    pool: [P, tile_f, D] the physical expert-weight pool (staging tail
+      included — remapped ids address it transparently).
+    Returns [R, K, NT * tile_f]: per routed expert, ``x @ W_plane^T``.
+    """
+    return _moe_paged_gateup(pids, x, pool, block_d=block_d,
+                             interpret=_resolve_interpret(interpret))
+
+
+def _down_kernel(pid_ref, h_ref, w_ref, out_ref, acc_ref, *, n_tiles: int):
+    ti = pl.program_id(3)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # hidden tile [1, tile_f] x weight-page slice [tile_f, bd] -> [1, bd]
+    acc_ref[...] += jax.lax.dot_general(
+        h_ref[...].reshape(1, -1).astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ti == n_tiles - 1)
+    def _fini():
+        out_ref[...] = acc_ref[...].reshape(out_ref.shape).astype(
+            out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _moe_paged_down(pids: jax.Array, h: jax.Array, pool: jax.Array, *,
+                    block_d: int, interpret: bool) -> jax.Array:
+    r, k, nt = pids.shape
+    _, tile_f, d = pool.shape
+    assert h.shape == (r, k, nt * tile_f)
+    bd = block_d or min(d, 512)
+    assert d % bd == 0
+    grid = (r, k, d // bd, nt)       # tiles last: contraction runs over
+    grid_spec = pltpu.PrefetchScalarGridSpec(  # the paged dim here
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tile_f),
+                         lambda ri, ji, di, ti, p: (ri, ji, ti)),
+            pl.BlockSpec((1, tile_f, bd),
+                         lambda ri, ji, di, ti, p: (p[ri, ji, ti], 0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bd),
+                               lambda ri, ji, di, ti, p: (ri, ji, di)),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+    )
+    kern = functools.partial(_down_kernel, n_tiles=nt)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, k, d), h.dtype),
+        interpret=interpret)(pids.astype(jnp.int32), h, pool)
+
+
+def moe_paged_down(pids: jax.Array, h: jax.Array, pool: jax.Array, *,
+                   block_d: int = 0,
+                   interpret: bool | None = None) -> jax.Array:
+    """Paged expert projection back to the model dim (down).
+
+    The contraction runs over the *paged* dimension: each grid step
+    fetches one ``[tile_f, D]`` weight page (indirect, scalar-prefetched
+    id) and accumulates ``h_tile @ W_tile`` into the output block.
+
+    pids: int32 [R, K, NT] resolved physical page ids of the down plane.
+    h: [R, K, NT * tile_f] the gated FFN hidden activations.
+    pool: [P, tile_f, D] the physical expert-weight pool.
+    Returns [R, K, D].
+    """
+    return _moe_paged_down(pids, h, pool, block_d=block_d,
+                           interpret=_resolve_interpret(interpret))

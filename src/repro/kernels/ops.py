@@ -14,6 +14,7 @@ import numpy as np
 from .gather_rows import gather_rows as _gather_rows
 from .gather_spmm import gather_spmm as _gather_spmm
 from .moe_dispatch import moe_dispatch_matmul as _moe_dispatch_matmul
+from .moe_dispatch import moe_paged_down, moe_paged_gateup  # noqa: F401
 from .sparse_decode_attn import sparse_decode_attn as _sparse_decode_attn
 
 

@@ -47,3 +47,26 @@ def moe_dispatch_matmul_ref(group_ids: jax.Array, x: jax.Array,
     wg = jnp.take(w, group_ids, axis=0).astype(jnp.float32)  # [TB, D, F]
     out = jnp.einsum("btd,bdf->btf", xb, wg)
     return out.reshape(t, -1).astype(x.dtype)
+
+
+def moe_paged_gateup_ref(pids: jax.Array, x: jax.Array,
+                         pool: jax.Array) -> jax.Array:
+    """Paged gate/up oracle: gather the routed experts' row tiles from
+    the pool and project.  pids [R,K,NT]; x [R,D]; pool [P,tile_f,D]
+    -> [R, K, NT*tile_f]."""
+    r, k, nt = pids.shape
+    w = jnp.take(pool, pids, axis=0)             # [R,K,NT,tile_f,D]
+    w = w.reshape(r, k, -1, w.shape[-1]).astype(jnp.float32)
+    return jnp.einsum("rd,rkfd->rkf", x.astype(jnp.float32),
+                      w).astype(x.dtype)
+
+
+def moe_paged_down_ref(pids: jax.Array, h: jax.Array,
+                       pool: jax.Array) -> jax.Array:
+    """Paged down oracle: pids [R,K,NT]; h [R,K,NT*tile_f];
+    pool [P,tile_f,D] -> [R, K, D]."""
+    r, k, nt = pids.shape
+    w = jnp.take(pool, pids, axis=0)             # [R,K,NT,tile_f,D]
+    w = w.reshape(r, k, -1, w.shape[-1]).astype(jnp.float32)
+    return jnp.einsum("rkf,rkfd->rkd", h.astype(jnp.float32),
+                      w).astype(h.dtype)

@@ -44,6 +44,16 @@ must still fit the pool alone: pages > (prompt_len + gen) / kv_page):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --continuous --requests 16 --prompt-len 24 --gen 8 --pages 12 \
       --spill 64 --runahead nvr
+
+Paged expert-weight streaming (MoE archs) — expert FFN weights become
+fixed row-tile pages resolved through block tables, optionally with
+router-keyed runahead staging predicted tiles into the expert pool's
+NSB tail (tokens bitwise-identical to --expert-pool dense; see
+ARCHITECTURE.md "paged expert-weight streaming"):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
+      --reduced --continuous --requests 16 --expert-pool paged \
+      --expert-runahead router
 """
 
 from __future__ import annotations
@@ -126,7 +136,12 @@ def _run_continuous(cfg, params, args):
                       runahead_pages=args.runahead_pages,
                       spill_pages=args.spill,
                       spill_compress=args.spill_compress,
-                      executor=args.executor)
+                      executor=args.executor,
+                      expert_pool=args.expert_pool,
+                      expert_tile_rows=args.expert_tile_rows,
+                      expert_nsb_slots=args.expert_nsb_slots,
+                      expert_runahead=args.expert_runahead,
+                      expert_runahead_pages=args.expert_runahead_pages)
     eng.run(workload)
     m = eng.metrics()
     print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
@@ -177,6 +192,22 @@ def _run_continuous(cfg, params, args):
                  f"{m['spill_dequant_error_bound']:.2e}"
                  if m["spill_compressed"] else "")
               + f"; resume-TTFT p50 {_fmt(m['p50_resume_ttft'], '.0f')}")
+    if args.expert_pool != "off":
+        print(f"[serve-cb] expert pool={m['expert_pool']}: "
+              f"{m['expert_pool_pages']} tile pages "
+              f"({m['expert_pool_mib']:.2f} MiB, "
+              f"{m['expert_tile_rows']}-row tiles), "
+              f"{m['expert_pages_touched']} demand touches, hit rate "
+              f"{_fmt(m['expert_nsb_hit_rate'])} (demand-LRU baseline "
+              f"{_fmt(m['expert_demand_lru_hit_rate'])})")
+    if args.expert_runahead != "off":
+        print(f"[serve-cb] expert runahead={m['expert_runahead_mode']}: "
+              f"{m['expert_staged_pages']} tiles staged "
+              f"({m['expert_stage_calls']} gathers, "
+              f"{m['expert_nsb_slots']} NSB slots), accuracy "
+              f"{_fmt(m['expert_runahead_accuracy'])}, coverage "
+              f"{_fmt(m['expert_runahead_coverage'])}, over-fetch "
+              f"{_fmt(m['expert_runahead_overfetch'])}")
     if not args.no_prefix_cache:
         print(f"[serve-cb] prefix cache: {m['prefix_hit_pages']} page "
               f"hits, {m['prefill_tokens_skipped']} prompt tokens "
@@ -252,6 +283,26 @@ def main(argv=None):
                    help="int8-compress spilled K/V planes (per-page "
                         "scales via optim.compress; page summaries stay "
                         "exact, so TopK selection survives bitwise)")
+    p.add_argument("--expert-pool", choices=("off", "dense", "paged"),
+                   default="off",
+                   help="MoE expert-weight serving: dense = per-layer "
+                        "materialised expert rows; paged = expert FFN "
+                        "weights as fixed row-tile pages resolved "
+                        "through block tables (MoE archs only; tokens "
+                        "bitwise-identical across modes)")
+    p.add_argument("--expert-tile-rows", type=int, default=32,
+                   help="rows of d_ff per expert weight tile page")
+    p.add_argument("--expert-nsb-slots", type=int, default=32,
+                   help="expert-pool NSB staging-tail slots (tiles)")
+    p.add_argument("--expert-runahead", choices=("off", "router"),
+                   default="off",
+                   help="router-keyed expert runahead: score the next "
+                        "decode batch's tokens against the layer-0 "
+                        "router between steps and stage the predicted "
+                        "expert tiles into the pool's NSB tail (needs "
+                        "--expert-pool paged)")
+    p.add_argument("--expert-runahead-pages", type=int, default=16,
+                   help="expert tile staging copies per iteration")
     p.add_argument("--executor", choices=("sync", "async"),
                    default="sync",
                    help="step-loop executor: sync = monolithic oracle "

@@ -77,6 +77,7 @@ from ..configs.base import ArchConfig
 from ..core.nvr import capture
 from ..models import api, sparse_attention, transformer
 from ..models import layers as mlayers
+from . import expert_pool as expert_pool_mod
 from . import runahead as runahead_mod
 from . import scheduler as scheduler_mod
 from .kv_allocator import NULL_PAGE, KVBlockAllocator, PagePoolConfig
@@ -259,6 +260,11 @@ class PagedServeStats(ServeStats):
     swap_out_pages: int = 0         # pages snapshotted device -> host
     swap_in_pages: int = 0          # pages restored host -> device
     fetch_backs: int = 0            # runahead-window early swap-resumes
+    # expert-weight page traffic (expert_pool != "off"): unique tile
+    # pages demanded per decode step, scored against the expert NSB
+    expert_pages_touched: int = 0
+    expert_nsb_hits: int = 0
+    expert_nsb_misses: int = 0
     # per-stream iteration accounting (the disaggregated executor's
     # TTFT/TPOT split): an iteration belongs to the prefill stream when
     # it ran >=1 prompt chunk, to the decode stream when it ran a decode
@@ -271,6 +277,12 @@ class PagedServeStats(ServeStats):
     # compare sync (streams serial) vs async (streams overlapped)
     iter_log: list = field(default_factory=list)
 
+    @property
+    def expert_hot_hit_rate(self) -> float | None:
+        """Expert-tile NSB hit rate (None before expert traffic)."""
+        tot = self.expert_nsb_hits + self.expert_nsb_misses
+        return self.expert_nsb_hits / tot if tot else None
+
 
 # sentinel distinguishing "run _fetch_back inline" (sync loop) from "the
 # executor already ran it in the overlap window, possibly returning None"
@@ -278,7 +290,8 @@ _FETCH_UNSET = object()
 
 
 def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
-                     tp_axis: str | None = None, n_demand: int = 0):
+                     tp_axis: str | None = None, n_demand: int = 0,
+                     ep_mode: str = "off", ep_n_demand: int = 0):
     """Build the ragged decode step over the physical page pools.
 
     One call advances R requests by one token each: per-request positions
@@ -313,6 +326,21 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
     stays in original demand page ids — are bitwise-identical to the
     no-runahead variant; with ``n_demand == 0`` the built graph is
     exactly the historic one (no extra argument, no remap ops).
+
+    ``ep_mode`` selects the expert-FFN implementation for MoE configs
+    (see :mod:`.expert_pool`): ``"off"`` keeps the historic
+    ``transformer._ffn`` (capacity-dispatch ``moe_ffn``); ``"dense"``
+    takes a trailing dense-materialised ``ep_rows [L,E,3,NT,tile,D]``
+    operand; ``"paged"`` takes trailing ``(ep_bt [L,E,3,NT], ep_pool
+    [P+slots,tile,D])`` and resolves routed expert ids through the
+    block table (plus a trailing ``ep_hot`` hot-map when
+    ``ep_n_demand > 0`` — expert tiles staged in the pool's NSB tail).
+    Both expert modes additionally return the per-layer routed expert
+    ids ``esel [L, R, top_k]``; dense and paged gather bitwise-
+    identical weight bytes into the same combine graph, so tokens and
+    logits are bitwise-invariant across dense / paged / paged+runahead.
+    Expert weights and routing are replicated under tp (only QKV
+    shards), so ``esel`` is shard-invariant.
     """
     page = cfg.kv_page
     dt = jnp.dtype(cfg.param_dtype)
@@ -320,7 +348,18 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
     g = cfg.n_heads // cfg.n_kv_heads        # GQA groups stay whole
     h_l = kv_l * g
 
-    def fn(params, k_pool, v_pool, s_pool, token, pos, bt, hot_map=None):
+    def fn(params, k_pool, v_pool, s_pool, token, pos, bt, *extra):
+        i = 0
+        hot_map = None
+        if n_demand:
+            hot_map, i = extra[0], 1
+        ep_rows = ep_bt = ep_pool = ep_hot = None
+        if ep_mode == "dense":
+            ep_rows = extra[i]
+        elif ep_mode == "paged":
+            ep_bt, ep_pool = extra[i], extra[i + 1]
+            if ep_n_demand:
+                ep_hot = extra[i + 2]
         r = token.shape[0]
         nl = bt.shape[1]
         k_sel = int(min(cfg.kv_topk_pages, nl))
@@ -385,14 +424,26 @@ def _paged_decode_fn(cfg: ArchConfig, kernel: str = "xla", tp: int = 1,
                               else h_l, cfg.hd)
             xc = xc + mlayers.attn_out(o, lp, cfg.d_model)
             h2 = mlayers.rms_norm(xc, lp["ln2"], cfg.norm_eps)
-            xc = xc + transformer._ffn(h2, lp, cfg)
-            return (xc, kp_, vp_, sp_), phys
+            if ep_mode == "off":
+                xc = xc + transformer._ffn(h2, lp, cfg)
+                return (xc, kp_, vp_, sp_), phys
+            if ep_mode == "dense":
+                y, eids = expert_pool_mod.dense_moe_ffn(
+                    h2, lp, jnp.take(ep_rows, li, axis=0), cfg)
+            else:
+                y, eids = expert_pool_mod.paged_moe_ffn(
+                    h2, lp, jnp.take(ep_bt, li, axis=0), ep_pool, cfg,
+                    hot_map=ep_hot, n_demand=ep_n_demand, kernel=kernel)
+            xc = xc + y
+            return (xc, kp_, vp_, sp_), (phys, eids)
 
         (x, k2, v2, s2), sel = mlayers.scan_layers(
             body, (x, k_pool, v_pool, s_pool), (params["layers"], lidx))
         x = mlayers.rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = transformer.logits_last(params, cfg, x)
-        return logits, k2, v2, s2, sel
+        if ep_mode == "off":
+            return logits, k2, v2, s2, sel
+        return logits, k2, v2, s2, sel[0], sel[1]
 
     return fn
 
@@ -499,7 +550,7 @@ def _norm_spec(spec: P) -> P:
 
 
 def _shard_serve_fn(fn, mesh, param_specs, n_rep_args: int,
-                    sel_out: bool = False,
+                    sel_out: bool = False, esel_out: bool = False,
                     axis: str = sharding.SERVE_TP_AXIS):
     """Wrap a per-shard decode/prefill body in ``shard_map`` over the
     KV-head axis.
@@ -522,6 +573,10 @@ def _shard_serve_fn(fn, mesh, param_specs, n_rep_args: int,
     out_specs = (P(), kv_spec, kv_spec, s_spec)
     if sel_out:
         out_specs = out_specs + (P(None, None, axis, None),)
+    if esel_out:
+        # routed expert ids: router and residual stream are replicated
+        # under serve TP, so every shard computes the identical routing
+        out_specs = out_specs + (P(),)
     return shard_map(fn, mesh=mesh, in_specs=in_specs,
                      out_specs=out_specs, check_rep=False)
 
@@ -602,6 +657,11 @@ class PagedEngine:
                  mesh=None,
                  runahead: str = "off",
                  runahead_pages: int = 8,
+                 expert_pool: str = "off",
+                 expert_tile_rows: int = 32,
+                 expert_nsb_slots: int = 32,
+                 expert_runahead: str = "off",
+                 expert_runahead_pages: int = 16,
                  spill_pages: int = 0,
                  spill_compress: bool = False,
                  executor: str = "sync") -> None:
@@ -619,6 +679,20 @@ class PagedEngine:
         if runahead not in runahead_mod.MODES:
             raise ValueError(f"runahead must be one of "
                              f"{runahead_mod.MODES}, got {runahead!r}")
+        if expert_pool not in expert_pool_mod.MODES:
+            raise ValueError(f"expert_pool must be one of "
+                             f"{expert_pool_mod.MODES}, got {expert_pool!r}")
+        if expert_pool != "off" and not cfg.n_experts:
+            raise ValueError("expert_pool requires an MoE-family config "
+                             f"(cfg {cfg.name!r} has n_experts=0)")
+        if expert_runahead not in runahead_mod.EXPERT_MODES:
+            raise ValueError(
+                f"expert_runahead must be one of "
+                f"{runahead_mod.EXPERT_MODES}, got {expert_runahead!r}")
+        if expert_runahead != "off" and expert_pool != "paged":
+            raise ValueError(
+                "expert_runahead needs expert_pool='paged': only the "
+                "paged path resolves tiles through a hot-map")
         if executor not in ("sync", "async"):
             raise ValueError(f"executor must be 'sync' or 'async', "
                              f"got {executor!r}")
@@ -668,11 +742,64 @@ class PagedEngine:
                       if runahead != "off" else None)
         self._predictor = (runahead_mod.RunaheadPredictor(mode=runahead)
                            if runahead != "off" else None)
+        # paged expert-weight pool (MoE family): expert FFN weights as
+        # fixed row-tile pages with per-layer block tables, an NSB
+        # staging tail for router-predicted tiles, and a demand-LRU
+        # comparator — the KV machinery's layout applied to the one
+        # read-only gather workload the paper is about
+        self.expert_pool_mode = expert_pool
+        self.expert_runahead = expert_runahead
+        self.expert_runahead_pages = expert_runahead_pages
+        self.ep = None
+        self._ep_tier = None
+        self._ep_predictor = None
+        self._ep_rows = None
+        self._ep_bt = None
+        self._ep_stage = None
+        self._router_proxy = None
+        self.ep_hot = None
+        self.ep_recorder = None
+        if expert_pool != "off":
+            self.ep = expert_pool_mod.ExpertPool(
+                cfg, params, tile_rows=expert_tile_rows,
+                nsb_slots=(expert_nsb_slots if expert_runahead != "off"
+                           else 0))
+            self._ep_tier = self.ep.tier
+            # the same demand traffic scored against a demand-install
+            # LRU of the staging tier's capacity: the in-run baseline
+            # the router-keyed hit rate is lifted over
+            self.ep_hot = capture.PageCache(expert_nsb_slots)
+            if expert_pool == "dense":
+                self._ep_rows = self.ep.dense_rows()
+            else:
+                self._ep_bt = self.ep.table_device()
+            if capture_trace:
+                self.ep_recorder = capture.expert_page_stream(
+                    f"serve-ep-{cfg.name}", n_pages=self.ep.n_pages,
+                    tile_rows=self.ep.tile_rows, d_model=cfg.d_model,
+                    dtype_bytes=self.ep.pool.dtype.itemsize)
+            if expert_runahead != "off":
+                self._ep_predictor = runahead_mod.RunaheadPredictor(
+                    mode="nvr")
+                self._router_proxy = jax.jit(
+                    runahead_mod.make_router_scorer(cfg))
+
+                # expert-tile staging gather: same donated fixed-shape
+                # pattern as the KV _stage jit ((0,0) scratch self-copy
+                # padding)
+                def _ep_stage_body(pool, src, dst):
+                    return pool.at[dst].set(pool[src])
+                self._ep_stage = jax.jit(_ep_stage_body,
+                                         donate_argnums=(0,))
         self.scheduler = Scheduler(
             self.allocator, max_batch=max_batch, chunk=chunk,
             token_budget=token_budget or (max_batch + chunk),
             row_buckets=self.row_buckets,
-            runahead_pages=runahead_pages if runahead != "off" else 0)
+            # either runahead flavour claims the decode stream's
+            # per-iteration staging grant
+            runahead_pages=(runahead_pages if runahead != "off" else
+                            (expert_runahead_pages
+                             if expert_runahead != "off" else 0)))
         self.max_batch = max_batch
         self.chunk = chunk
         self.stats = PagedServeStats()
@@ -728,11 +855,22 @@ class PagedEngine:
         # remap gathers into the staging tail; n_demand=0 builds the
         # exact historic graph (bitwise anchor for runahead="off")
         n_demand = self.n_pages if runahead != "off" else 0
+        # expert-pool decode variants thread their (replicated) weight
+        # operands as trailing args: dense rows, or block table + pool
+        # (+ the expert hot-map when the staging tier is live)
+        ep_n_demand = (self.ep.n_pages
+                       if self._ep_tier is not None else 0)
         n_rep_decode = 3 if runahead == "off" else 4
+        if expert_pool == "dense":
+            n_rep_decode += 1
+        elif expert_pool == "paged":
+            n_rep_decode += 2 + (1 if ep_n_demand else 0)
         if mesh is None:
             self._pool_shardings = None
             self._decode = jax.jit(
-                _paged_decode_fn(cfg, kernel, n_demand=n_demand),
+                _paged_decode_fn(cfg, kernel, n_demand=n_demand,
+                                 ep_mode=expert_pool,
+                                 ep_n_demand=ep_n_demand),
                 donate_argnums=donate)
             self._prefill = jax.jit(_paged_prefill_fn(cfg, chunk),
                                     donate_argnums=donate)
@@ -763,8 +901,11 @@ class PagedEngine:
             self._decode = jax.jit(
                 _shard_serve_fn(
                     _paged_decode_fn(cfg, kernel, self.tp, axis,
-                                     n_demand=n_demand),
-                    mesh, pspecs, n_rep_args=n_rep_decode, sel_out=True),
+                                     n_demand=n_demand,
+                                     ep_mode=expert_pool,
+                                     ep_n_demand=ep_n_demand),
+                    mesh, pspecs, n_rep_args=n_rep_decode, sel_out=True,
+                    esel_out=(expert_pool != "off")),
                 donate_argnums=donate)
             self._prefill = jax.jit(
                 _shard_serve_fn(
@@ -848,6 +989,8 @@ class PagedEngine:
             self.stats.finished += 1
             if self._predictor is not None:
                 self._predictor.forget(req.rid)
+            if self._ep_predictor is not None:
+                self._ep_predictor.forget(req.rid)
 
     def _apply_cow_copies(self) -> None:
         """Replay the allocator's pending copy-on-write page copies onto
@@ -1023,13 +1166,29 @@ class PagedEngine:
             # copy (see _paged_decode_fn), so their entries stay live —
             # snapshot the hot-map the gather will resolve through
             hot_args = (jnp.asarray(self._tier.hot_map().copy()),)
-        logits, self.k_pool, self.v_pool, self.s_pool, sel = self._decode(
+        if self.ep is not None:
+            if self.expert_pool_mode == "dense":
+                hot_args += (self._ep_rows,)
+            else:
+                hot_args += (self._ep_bt, self.ep.pool)
+                if self._ep_tier is not None:
+                    # expert tiles are read-only: staged copies never go
+                    # stale, so the snapshot is only for dispatch-time
+                    # consistency with the staging gather
+                    hot_args += (self.ep.hot_map_device(),)
+        out = self._decode(
             self.params, self.k_pool, self.v_pool, self.s_pool,
             jnp.asarray(token), jnp.asarray(pos), jnp.asarray(bts),
             *hot_args)
-        return logits, sel
+        if self.ep is not None:
+            logits, self.k_pool, self.v_pool, self.s_pool, sel, esel = out
+        else:
+            logits, self.k_pool, self.v_pool, self.s_pool, sel = out
+            esel = None
+        return logits, sel, esel
 
-    def _commit_decode(self, pairs: list, logits, sel, rb: int) -> None:
+    def _commit_decode(self, pairs: list, logits, sel, rb: int,
+                       esel=None) -> None:
         """The decode stream's sample/commit boundary.
 
         Commits run in *plan order* (the order ``pairs`` carries), not
@@ -1105,6 +1264,43 @@ class PagedEngine:
             for slot, req in pairs:
                 rp = np.unique(sel0[slot])
                 self._predictor.observe(req.rid, rp[rp != NULL_PAGE])
+        if esel is not None:
+            self._account_expert_pages(pairs, np.asarray(esel), occ)
+
+    def _account_expert_pages(self, pairs: list, es: np.ndarray,
+                              occ: np.ndarray) -> None:
+        """Expert-tile demand accounting for one committed decode step.
+
+        ``es`` is the step's routed expert ids ``[L, R, top_k]``.  Every
+        routed (request, layer, expert) demands the expert's full tile
+        range (3 planes x NT pages); traffic is recorded per request
+        (tier-tagged HBM demand), fed to the per-request history
+        predictor across *all* layers, and scored — by unique page over
+        the whole step, np.unique-sorted so the touch order is a
+        function of the page set alone — against both the staging tier
+        (when live) and the always-on demand-LRU comparator."""
+        ep = self.ep
+        layers = range(ep.n_layers)
+        for slot, req in pairs:
+            pages = np.concatenate(
+                [ep.pages_for_experts(li, es[li, slot]) for li in layers])
+            if self.ep_recorder is not None:
+                self.ep_recorder.record(pages, rid=req.rid,
+                                        step=self.now,
+                                        tier=capture.TIER_HBM)
+            if self._ep_predictor is not None:
+                self._ep_predictor.observe(req.rid, np.unique(pages))
+        uniq = np.unique(np.concatenate(
+            [ep.pages_for_experts(li, es[li, occ]) for li in layers]))
+        for p in uniq:
+            self.stats.expert_pages_touched += 1
+            lru_hit = self.ep_hot.touch(int(p))
+            hit = (self._ep_tier.touch(int(p))
+                   if self._ep_tier is not None else lru_hit)
+            if hit:
+                self.stats.expert_nsb_hits += 1
+            else:
+                self.stats.expert_nsb_misses += 1
 
     def _run_decode(self, rows: list, bucket: int = 0) -> None:
         # ragged batches pad to the scheduler's power-of-two row bucket
@@ -1113,8 +1309,8 @@ class PagedEngine:
         # padded compute shrinks with the actual batch
         rb = bucket or self.max_batch
         pairs = list(enumerate(rows))
-        logits, sel = self._dispatch_decode(pairs, rb)
-        self._commit_decode(pairs, logits, sel, rb)
+        logits, sel, esel = self._dispatch_decode(pairs, rb)
+        self._commit_decode(pairs, logits, sel, rb, esel)
 
     # -- iteration loop ------------------------------------------------------
 
@@ -1162,7 +1358,8 @@ class PagedEngine:
         if plan.decode:
             self._run_decode(plan.decode, plan.decode_bucket)
             self.stats.steps += 1
-        if self._tier is not None and plan.runahead_budget > 0:
+        if ((self._tier is not None or self._ep_tier is not None)
+                and plan.runahead_budget > 0):
             self._run_runahead(plan)
         self._account_streams(plan)
         self.stats.preemptions = self.scheduler.n_preemptions
@@ -1181,7 +1378,18 @@ class PagedEngine:
         self.stats.iter_log.append((n_p, n_d))
 
     def _run_runahead(self, plan, fetched=_FETCH_UNSET) -> None:
-        """The between-steps runahead stage: predict, filter, stage.
+        """The between-steps runahead stage, per staging tier: the KV
+        tier's predict/filter/stage (plus fetch-back) when KV runahead
+        is on, then the expert-weight tier's router-keyed stage when
+        expert runahead is on — both riding the same decode-stream
+        budget window."""
+        if self._tier is not None:
+            self._run_kv_runahead(plan, fetched)
+        if self._ep_tier is not None:
+            self._run_expert_runahead(plan)
+
+    def _run_kv_runahead(self, plan, fetched=_FETCH_UNSET) -> None:
+        """The between-steps KV runahead stage: predict, filter, stage.
 
         Candidates are every request decoding next iteration — the
         rows just decoded plus requests that completed prefill this
@@ -1307,6 +1515,80 @@ class PagedEngine:
             for i in range(len(grp)):
                 u = np.unique(phys[i])
                 out.extend(int(p) for p in u if p != NULL_PAGE)
+        return out
+
+    def _run_expert_runahead(self, plan) -> None:
+        """The expert-weight runahead stage: stage the tile pages the
+        next decode step's routing will demand.
+
+        Candidates are the requests decoding next iteration (rows just
+        decoded plus prefill completions entering decode).  The
+        DARE-style filter routes requests whose routed-expert selection
+        has stabilised to their history predictor — covering *all*
+        layers' tiles — and only the rest through the router scorer,
+        which predicts layer-0 routing from each row's known next
+        token (:func:`runahead.make_router_scorer`).  Staged tiles are
+        byte-exact copies of read-only weights: no invalidation path
+        exists or is needed, and a misprediction costs staging
+        bandwidth, never a logit."""
+        tier, pred = self._ep_tier, self._ep_predictor
+        cands = [r for r in plan.decode if not r.done]
+        seen = {r.rid for r in cands}
+        for job in plan.prefill:
+            req = job.req
+            if (not req.done and req.rid not in seen
+                    and req.computed >= req.prompt_len):
+                cands.append(req)
+                seen.add(req.rid)
+        if not cands:
+            return
+        covered, proxy = pred.split([r.rid for r in cands])
+        tier.stats.filtered_rows += len(covered)
+        pages: list = []
+        for rid in covered:
+            pages.extend(pred.history(rid))
+        if proxy:
+            pages.extend(self._predict_router(
+                [self.requests[rid] for rid in proxy]))
+        copies = tier.stage(pages, max_copies=self.expert_runahead_pages)
+        if not copies:
+            return
+        # fixed-shape staging gather, (0, 0) scratch-page self-copies
+        # as padding — compiles once for any copy count
+        src = np.zeros((max(1, self.expert_runahead_pages),),
+                       dtype=np.int32)
+        dst = np.zeros_like(src)
+        for j, (s, slot) in enumerate(copies):
+            src[j] = s
+            dst[j] = self.ep.n_pages + slot
+        self.ep.pool = self._ep_stage(self.ep.pool, jnp.asarray(src),
+                                      jnp.asarray(dst))
+        tier.stats.stage_calls += 1
+        if self.ep_recorder is not None:
+            self.ep_recorder.record(
+                np.asarray([s for s, _ in copies], dtype=np.int64),
+                step=self.now, tier=capture.TIER_NSB)
+
+    def _predict_router(self, reqs: list) -> list:
+        """Run the router scorer over ``reqs`` and return the predicted
+        layer-0 expert tile pages (the proxy's reach; deeper layers are
+        the history predictor's job)."""
+        tier = self._ep_tier
+        tier.stats.proxy_rows += len(reqs)
+        out: list = []
+        mb = self.max_batch
+        for i0 in range(0, len(reqs), mb):
+            grp = reqs[i0:i0 + mb]
+            rb = (scheduler_mod.bucket_for(len(grp), self.row_buckets)
+                  if self.row_buckets else mb)
+            token = np.zeros((rb,), dtype=np.int32)
+            for i, req in enumerate(grp):
+                token[i] = req.seq[req.computed]
+            eids = np.asarray(self._router_proxy(self.params,
+                                                 jnp.asarray(token)))
+            for i in range(len(grp)):
+                out.extend(int(p) for p in
+                           self.ep.pages_for_experts(0, eids[i]))
         return out
 
     def run(self, workload=None, max_iters: int = 100000) -> dict:
@@ -1443,4 +1725,26 @@ class PagedEngine:
             if self.tier_shards is not None:
                 out["runahead_shard_hit_rates"] = \
                     self.tier_shards.hit_rates()
+        out["expert_pool"] = self.expert_pool_mode
+        if self.ep is not None:
+            out["expert_pool_pages"] = self.ep.n_pages
+            out["expert_pool_mib"] = self.ep.pool_bytes / 2 ** 20
+            out["expert_tile_rows"] = self.ep.tile_rows
+            out["expert_pages_touched"] = self.stats.expert_pages_touched
+            out["expert_nsb_hit_rate"] = self.stats.expert_hot_hit_rate
+            # the same demand traffic scored against a demand-install
+            # LRU of the tier's capacity — the in-run baseline the
+            # router-keyed hit rate is lifted over
+            out["expert_demand_lru_hit_rate"] = self.ep_hot.hit_rate
+            out["expert_runahead_mode"] = self.expert_runahead
+        if self._ep_tier is not None:
+            t = self._ep_tier
+            out["expert_nsb_slots"] = self.ep.nsb_slots
+            out["expert_staged_pages"] = t.stats.staged_pages
+            out["expert_stage_calls"] = t.stats.stage_calls
+            out["expert_proxy_rows"] = t.stats.proxy_rows
+            out["expert_filtered_rows"] = t.stats.filtered_rows
+            out["expert_runahead_accuracy"] = t.accuracy
+            out["expert_runahead_coverage"] = t.coverage
+            out["expert_runahead_overfetch"] = t.overfetch
         return out

@@ -117,8 +117,9 @@ class PipelinedExecutor:
             decode_out = eng._dispatch_decode(pairs, rb)
         # -- overlap window: device drains, host works ahead -----------
         fetched = None
-        run_stage = eng._tier is not None and plan.runahead_budget > 0
-        if run_stage:
+        run_stage = ((eng._tier is not None or eng._ep_tier is not None)
+                     and plan.runahead_budget > 0)
+        if run_stage and eng._tier is not None:
             # the spilled queue head's host->HBM restore rides under the
             # in-flight compute (pool dataflow orders it after); it sees
             # pre-commit occupancy — the sanctioned timeline divergence
@@ -131,8 +132,8 @@ class PipelinedExecutor:
         for job, logits in prefills:
             eng._commit_prefill(job, logits)
         if decode_out is not None:
-            logits, sel = decode_out
-            eng._commit_decode(pairs, logits, sel, rb)
+            logits, sel, esel = decode_out
+            eng._commit_decode(pairs, logits, sel, rb, esel=esel)
             eng.stats.steps += 1
         if run_stage:
             eng._run_runahead(plan, fetched=fetched)

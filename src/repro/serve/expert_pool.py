@@ -1,0 +1,227 @@
+"""Paged expert-weight pool: MoE expert tiles as first-class pages.
+
+The serve engines built the full paged/NSB/runahead machinery for KV
+pages (PRs 2-8) while the one workload the paper's runahead thread was
+designed around — dynamic routing decisions picking which expert weight
+tiles to fetch — still read dense ``[E, D, F]`` weight cubes.  This
+module closes that gap: expert FFN weights become fixed row-tile pages
+in a physical page-id space, resolved through per-layer block tables,
+with an NSB staging tail for router-predicted hot tiles.
+
+Layout contract
+---------------
+
+Each layer's three expert planes (gate, up, down) are stored row-major
+in the FFN hidden dimension: gate/up transpose from ``[D, F]`` to
+``[F, D]`` so every plane is ``F`` rows of ``D`` features, cut into
+``NT = F // tile_rows`` pages of ``tile_rows`` rows.  The physical pool
+is ``[n_pages + nsb_slots, tile_rows, D]``:
+
+* page ``0`` is the reserved scratch page (all zeros) — the same NULL
+  convention the KV pool uses, so fixed-shape staging gathers can pad
+  with value-identical ``(0, 0)`` self-copies;
+* pages ``1 .. L*E*3*NT`` are the demand region, laid out
+  ``page = 1 + (((layer*E + expert)*3 + plane)*NT + tile)`` — one
+  expert's tiles are contiguous, so "stage expert e" is a contiguous
+  page range (the paper's coverage-oriented fuzzy fetch at expert
+  granularity);
+* the tail ``[n_pages, n_pages + nsb_slots)`` is the NSB hot tier:
+  byte-exact staged copies addressed through a
+  :class:`~repro.serve.runahead.NSBHotTier` hot-map, exactly as the KV
+  pools' staging tail.  Expert weights are read-only for the whole
+  serve lifetime, so — unlike KV pages — a staged expert tile can
+  never go stale and the tier never needs invalidation.
+
+The block table ``[L, E, 3, NT]`` maps (layer, expert, plane, tile) to
+physical page id.  Because the layout is static the table is an
+affine function of its indices — but the serve path still resolves
+through it (``bt[layer][eids]``), because the *indirection* is the
+point: the demand gather and the runahead predictor meet in one
+physical page-id space, the same currency trick the KV side uses.
+
+Bitwise parity contract
+-----------------------
+
+:func:`dense_moe_ffn` (weights gathered from a dense per-layer
+``[E, 3, NT, tile, D]`` materialisation) and :func:`paged_moe_ffn`
+(weights gathered from the pool through the block table, hot-map remap
+included) share :func:`route` and :func:`_combine` — the gathers
+differ, but gathers are pure copies and the math downstream runs on
+identically-shaped, bitwise-identical operands, so tokens and logits
+are bitwise-invariant across dense / paged / paged+runahead
+(``moe_serve_bench`` asserts this in-run).  The ``kernel="pallas"``
+path lowers the two GEMMs to ``kernels.moe_paged_gateup`` /
+``moe_paged_down`` (scalar-prefetched page ids, double-buffered tile
+DMAs); off-TPU it runs the Pallas interpreter and parity is
+tolerance-level, like the attention kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import moe_paged_down, moe_paged_gateup
+from . import runahead as runahead_mod
+
+MODES = ("off", "dense", "paged")
+PLANE_GATE, PLANE_UP, PLANE_DOWN = 0, 1, 2
+N_PLANES = 3
+
+
+class ExpertPool:
+    """Physical expert-weight pool + block table + optional NSB tier.
+
+    Built once from the model params at engine construction; the pool
+    array is handed to the decode jit as a (non-donated) read-only
+    operand, except for the staging gather which rewrites tail slots.
+    """
+
+    def __init__(self, cfg, params, *, tile_rows: int = 32,
+                 nsb_slots: int = 0) -> None:
+        lp = params["layers"]
+        gate, up, down = lp["we_gate"], lp["we_up"], lp["we_down"]
+        l, e, d, f = gate.shape
+        if f % tile_rows:
+            raise ValueError(
+                f"expert tile_rows {tile_rows} must divide d_ff_expert "
+                f"{f} (pages are fixed-size row tiles)")
+        self.n_layers, self.n_experts = l, e
+        self.d_model, self.d_ff = d, f
+        self.tile_rows = tile_rows
+        self.nt = f // tile_rows
+        # demand region: scratch page 0 + one page per (l, e, plane, tile)
+        self.n_pages = 1 + l * e * N_PLANES * self.nt
+        self.nsb_slots = nsb_slots
+        # all three planes as [F, D] row planes (gate/up transposed),
+        # stacked to [L, E, 3, F, D] and cut into row tiles
+        planes = jnp.stack([jnp.swapaxes(gate, 2, 3),
+                            jnp.swapaxes(up, 2, 3),
+                            down], axis=2)
+        tiles = planes.reshape(l * e * N_PLANES * self.nt, tile_rows, d)
+        zeros = jnp.zeros((1 + nsb_slots, tile_rows, d), tiles.dtype)
+        self.pool = jnp.concatenate([zeros[:1], tiles, zeros[1:]], axis=0)
+        self.block_table = np.arange(
+            1, self.n_pages, dtype=np.int32).reshape(l, e, N_PLANES,
+                                                     self.nt)
+        # the staging tier (None without slots): FIFO slot recycling +
+        # hot-map + PageCache accounting twin, shared with the KV side.
+        # Weights are read-only, so invalidate() is never needed here.
+        self.tier = (runahead_mod.NSBHotTier(self.n_pages, nsb_slots)
+                     if nsb_slots > 0 else None)
+
+    # -- id space ------------------------------------------------------------
+
+    def pages_for_experts(self, layer: int, eids) -> np.ndarray:
+        """All physical pages (3 planes x NT tiles) the given experts of
+        ``layer`` occupy — the traffic one routed (token, expert) pair
+        demands.  ``eids`` is any int array-like of expert ids."""
+        eids = np.asarray(eids, dtype=np.int64).reshape(-1)
+        return self.block_table[layer, eids].reshape(-1)
+
+    @property
+    def pages_per_expert(self) -> int:
+        return N_PLANES * self.nt
+
+    @property
+    def page_bytes(self) -> int:
+        return self.tile_rows * self.d_model * self.pool.dtype.itemsize
+
+    @property
+    def pool_bytes(self) -> int:
+        return int(self.pool.nbytes)
+
+    # -- views ---------------------------------------------------------------
+
+    def table_device(self) -> jax.Array:
+        """The block table as a device array for the decode jit."""
+        return jnp.asarray(self.block_table)
+
+    def dense_rows(self) -> jax.Array:
+        """The dense-materialised baseline view ``[L, E, 3, NT, tile,
+        D]``: the same bytes as the demand pages, without the page
+        indirection — what :func:`dense_moe_ffn` gathers from."""
+        return self.pool[self.block_table]
+
+    def hot_map_device(self) -> jax.Array:
+        """Snapshot the tier's hot-map for one decode dispatch."""
+        return jnp.asarray(self.tier.hot_map().copy())
+
+
+# -- the serve-side expert FFN -------------------------------------------------
+
+def route(xr: jax.Array, router: jax.Array, k: int):
+    """Top-k routing head: f32 logits, top-k, softmax over the selected
+    gates — the same math :func:`repro.models.moe._route_row` front-ends
+    the capacity dispatch with, minus the capacity machinery (a decode
+    step routes R independent single-token rows; nothing can be
+    dropped).  Returns (gates [R, k] f32, eids int32 [R, k])."""
+    logits = jnp.einsum("rd,de->re", xr.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    gates, eids = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return gates, eids.astype(jnp.int32)
+
+
+def _combine(xr: jax.Array, gates: jax.Array, w: jax.Array) -> jax.Array:
+    """The shared SwiGLU expert mix: ``w`` [R, K, 3, NT, tile, D] holds
+    the routed experts' weight tiles (however they were gathered); both
+    FFN variants funnel through this one function so their math is the
+    same jaxpr on the same shapes — the bitwise-parity hinge."""
+    r, k = gates.shape
+    d = xr.shape[-1]
+    w = w.astype(xr.dtype)
+    wg = w[:, :, PLANE_GATE].reshape(r, k, -1, d)
+    wu = w[:, :, PLANE_UP].reshape(r, k, -1, d)
+    wd = w[:, :, PLANE_DOWN].reshape(r, k, -1, d)
+    g = jnp.einsum("rd,rkfd->rkf", xr, wg)
+    u = jnp.einsum("rd,rkfd->rkf", xr, wu)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("rkf,rkfd->rkd", h, wd)
+    return jnp.einsum("rk,rkd->rd", gates.astype(y.dtype), y)
+
+
+def dense_moe_ffn(x: jax.Array, lp: dict, rows_l: jax.Array, cfg):
+    """Dense-materialised expert FFN for one decode step of one layer.
+
+    ``x`` [R, 1, D]; ``rows_l`` [E, 3, NT, tile, D] this layer's slice
+    of :meth:`ExpertPool.dense_rows`.  Returns ([R, 1, D], eids [R, k]).
+    """
+    xr = x[:, 0]
+    gates, eids = route(xr, lp["router"], cfg.top_k)
+    w = jnp.take(rows_l, eids, axis=0)          # [R,K,3,NT,tile,D]
+    out = _combine(xr, gates, w)
+    return out[:, None].astype(x.dtype), eids
+
+
+def paged_moe_ffn(x: jax.Array, lp: dict, bt_l: jax.Array,
+                  pool: jax.Array, cfg, *, hot_map=None, n_demand: int = 0,
+                  kernel: str = "xla"):
+    """Paged expert FFN: resolve routed expert ids to physical tile
+    pages through the block table (hot-map remap into the NSB tail when
+    the runahead tier is live) and gather from the pool.
+
+    ``x`` [R, 1, D]; ``bt_l`` int32 [E, 3, NT] this layer's block-table
+    slice; ``pool`` [n_pages + slots, tile, D].  ``kernel="pallas"``
+    runs the scalar-prefetched tile-GEMM kernels instead of the XLA
+    gather oracle.  Returns ([R, 1, D], eids [R, k]).
+    """
+    xr = x[:, 0]
+    gates, eids = route(xr, lp["router"], cfg.top_k)
+    pids = jnp.take(bt_l, eids, axis=0)         # [R,K,3,NT]
+    if n_demand:
+        # staged tiles are byte-exact copies of read-only weights, so
+        # the remap moves the read, never the value
+        slot = hot_map[pids]
+        pids = jnp.where(slot >= 0, n_demand + slot, pids)
+    if kernel == "pallas":
+        g = moe_paged_gateup(pids[:, :, PLANE_GATE], xr, pool)
+        u = moe_paged_gateup(pids[:, :, PLANE_UP], xr, pool)
+        h = jax.nn.silu(g) * u
+        y = moe_paged_down(pids[:, :, PLANE_DOWN], h, pool)
+        out = jnp.einsum("rk,rkd->rd", gates.astype(y.dtype), y)
+    else:
+        w = jnp.take(pool, pids, axis=0)        # [R,K,3,NT,tile,D]
+        out = _combine(xr, gates, w)
+    return out[:, None].astype(x.dtype), eids

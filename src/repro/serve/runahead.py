@@ -80,6 +80,11 @@ from ..core.nvr.capture import PageCache
 
 MODES = ("off", "imp", "nvr")
 
+# expert-weight runahead modes (PagedEngine(expert_runahead=...)):
+# "router" predicts the next decode batch's routed experts with the
+# router itself as the address-generation slice (see make_router_scorer)
+EXPERT_MODES = ("off", "router")
+
 
 @dataclass
 class RunaheadStats:
@@ -353,5 +358,46 @@ def make_proxy_scorer(cfg):
         _, phys = sparse_attention.select_pages_blocktable(
             qh, s_pool[0], bt, n_valid, k_sel)
         return phys
+
+    return fn
+
+
+def make_router_scorer(cfg):
+    """Build the expert-weight address-generation slice: next-step
+    TopK *expert* prediction from the router itself.
+
+    Returns ``fn(params, token) -> eids`` with token int32 [R] (each
+    row's known next input token) and eids int32 [R, top_k] — the
+    predicted layer-0 routing of the next decode step.  The slice
+    embeds the token, applies layer 0's pre-FFN norm, and scores it
+    through layer 0's router: the router *is* the paper's cheap
+    address-generation function here (NeutronSparse's coordinated-
+    engines framing — routing computes the gather addresses an
+    iteration before the FFN demands the tiles), and skipping the
+    attention/residual stream keeps it inside the decoupled
+    sub-thread's few-percent cost budget.  Deeper layers' routing is
+    not modelled — the per-request history predictor covers them once a
+    request's expert selection stabilises, the same DARE-style division
+    of labour as the KV proxy.  Speculative by construction: output
+    steers staging only, so a misrouted prediction costs staging
+    bandwidth, never a logit.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import layers as mlayers
+
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def fn(params, token):
+        x = jnp.take(params["embed"], token[:, None], axis=0).astype(dt)
+        if getattr(cfg, "scale_embed", False):
+            x = x * (cfg.d_model ** 0.5)
+        lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+        h = mlayers.rms_norm(x, lp0["ln2"], cfg.norm_eps)[:, 0]
+        logits = jnp.einsum("rd,de->re", h.astype(jnp.float32),
+                            lp0["router"].astype(jnp.float32))
+        _, eids = jax.lax.top_k(logits, cfg.top_k)
+        return eids.astype(jnp.int32)
 
     return fn

@@ -99,6 +99,31 @@ class TestMoEAdapter:
                 assert ev.max() < st.n_rows
                 assert len(ev) == min(32, d_ff)
 
+    def test_topk_matrix_counts_every_pair(self):
+        """Regression: a ``[T, k]`` top-k routing matrix is the same
+        traffic as its ``T*k`` flattened top-1 view — each (token,
+        expert) pair demands its expert's weights once."""
+        rng = np.random.default_rng(3)
+        topk = rng.integers(0, 8, size=(100, 2))
+        st2 = capture.moe_expert_stream(topk, n_experts=8, d_model=64,
+                                        d_ff=128)
+        st1 = capture.moe_expert_stream(topk.reshape(-1), n_experts=8,
+                                        d_model=64, d_ff=128)
+        assert st2.n_events == st1.n_events
+        for a, b in zip(st2.events, st1.events):
+            np.testing.assert_array_equal(a, b)
+
+    def test_bad_expert_ids_rejected(self):
+        with pytest.raises(ValueError, match="top-1 or"):
+            capture.moe_expert_stream(np.zeros((2, 3, 4)), n_experts=4,
+                                      d_model=32, d_ff=64)
+        with pytest.raises(ValueError, match="must lie in"):
+            capture.moe_expert_stream(np.array([0, 4]), n_experts=4,
+                                      d_model=32, d_ff=64)
+        with pytest.raises(ValueError, match="must lie in"):
+            capture.moe_expert_stream(np.array([[0, -1]]), n_experts=4,
+                                      d_model=32, d_ff=64)
+
     def test_nvr_covers_routed_traffic(self):
         rng = np.random.default_rng(1)
         eids = rng.choice(4, p=[.5, .3, .15, .05], size=256)

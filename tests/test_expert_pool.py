@@ -1,0 +1,236 @@
+"""Paged expert-weight pool: layout, parity, serve-path invariance.
+
+The soundness bar is **bitwise**: dense-materialised, block-table-paged
+and paged+runahead expert FFNs must produce identical tokens and logits
+— gathers are pure copies, the math downstream shares one function
+(``expert_pool._combine``), and staged NSB-tail copies are byte-exact
+relocations of read-only weights.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve import expert_pool
+from repro.serve.engine import PagedEngine
+from repro.serve.runahead import make_router_scorer
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def pool(moe_setup):
+    cfg, params = moe_setup
+    return expert_pool.ExpertPool(cfg, params, tile_rows=32, nsb_slots=8)
+
+
+class TestLayout:
+    def test_page_id_space(self, moe_setup, pool):
+        cfg, params = moe_setup
+        l, e = cfg.n_layers, cfg.n_experts
+        nt = (cfg.d_ff_expert or cfg.d_ff) // 32
+        assert pool.n_pages == 1 + l * e * 3 * nt
+        assert pool.pool.shape == (pool.n_pages + 8, 32, cfg.d_model)
+        # page 0 is the zero scratch page; the tail starts zeroed
+        assert not np.asarray(pool.pool[0]).any()
+        assert not np.asarray(pool.pool[pool.n_pages:]).any()
+        # affine layout: one expert's tiles are one contiguous range
+        for li in range(l):
+            for ei in range(e):
+                pages = pool.pages_for_experts(li, [ei])
+                assert len(pages) == pool.pages_per_expert == 3 * nt
+                assert (np.diff(np.sort(pages)) == 1).all()
+
+    def test_pages_hold_the_weights(self, moe_setup, pool):
+        cfg, params = moe_setup
+        lp = params["layers"]
+        bt = pool.block_table
+        # gate/up planes transpose [D,F] -> [F,D]; down stays [F,D]
+        got = np.asarray(pool.pool[bt[1, 2, expert_pool.PLANE_GATE]]
+                         ).reshape(-1, cfg.d_model)
+        want = np.asarray(lp["we_gate"][1, 2]).T
+        np.testing.assert_array_equal(got, want)
+        got = np.asarray(pool.pool[bt[0, 3, expert_pool.PLANE_DOWN]]
+                         ).reshape(-1, cfg.d_model)
+        np.testing.assert_array_equal(got, np.asarray(lp["we_down"][0, 3]))
+
+    def test_dense_rows_same_bytes(self, moe_setup, pool):
+        cfg, _ = moe_setup
+        rows = np.asarray(pool.dense_rows())
+        assert rows.shape[:3] == (cfg.n_layers, cfg.n_experts, 3)
+        np.testing.assert_array_equal(
+            rows[1, 0], np.asarray(pool.pool[pool.block_table[1, 0]]))
+
+    def test_tile_rows_must_divide(self, moe_setup):
+        cfg, params = moe_setup
+        with pytest.raises(ValueError, match="must divide"):
+            expert_pool.ExpertPool(cfg, params, tile_rows=24)
+
+
+class TestFFNParity:
+    def test_dense_vs_paged_bitwise(self, moe_setup, pool):
+        cfg, params = moe_setup
+        x = jnp.asarray(np.random.default_rng(1).normal(
+            size=(5, 1, cfg.d_model)), pool.pool.dtype)
+        lp = jax.tree.map(lambda a: a[0], params["layers"])
+        rows = pool.dense_rows()
+        yd, ed = expert_pool.dense_moe_ffn(x, lp, rows[0], cfg)
+        yp, ep = expert_pool.paged_moe_ffn(
+            x, lp, pool.table_device()[0], pool.pool, cfg)
+        np.testing.assert_array_equal(np.asarray(yd), np.asarray(yp))
+        np.testing.assert_array_equal(np.asarray(ed), np.asarray(ep))
+
+    def test_hot_remap_is_value_invisible(self, moe_setup, pool):
+        """Staged tail copies are byte-exact: resolving reads through
+        the hot-map must not change a single bit."""
+        cfg, _ = moe_setup
+        x = jnp.asarray(np.random.default_rng(2).normal(
+            size=(4, 1, cfg.d_model)), pool.pool.dtype)
+        lp = jax.tree.map(lambda a: a[0],
+                          moe_setup[1]["layers"])
+        bt0 = pool.table_device()[0]
+        base, _ = expert_pool.paged_moe_ffn(x, lp, bt0, pool.pool, cfg)
+        # stage pages 1..8 into the tail and point the hot map at them
+        staged = pool.pool.at[pool.n_pages:pool.n_pages + 8].set(
+            pool.pool[1:9])
+        hot = np.full(pool.n_pages, -1, np.int32)
+        hot[1:9] = np.arange(8)
+        got, _ = expert_pool.paged_moe_ffn(
+            x, lp, bt0, staged, cfg, hot_map=jnp.asarray(hot),
+            n_demand=pool.n_pages)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+    def test_pallas_kernel_path(self, moe_setup, pool):
+        cfg, params = moe_setup
+        x = jnp.asarray(np.random.default_rng(3).normal(
+            size=(4, 1, cfg.d_model)), pool.pool.dtype)
+        lp = jax.tree.map(lambda a: a[0], params["layers"])
+        bt0 = pool.table_device()[0]
+        ref, er = expert_pool.paged_moe_ffn(x, lp, bt0, pool.pool, cfg)
+        got, eg = expert_pool.paged_moe_ffn(x, lp, bt0, pool.pool, cfg,
+                                            kernel="pallas")
+        np.testing.assert_array_equal(np.asarray(er), np.asarray(eg))
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_route_matches_moe_routing(self, moe_setup):
+        """The serve route() must pick the same experts as the training
+        path's dispatch (``moe._route_row``) — prediction and demand
+        live in one id space."""
+        from repro.models import moe
+
+        cfg, params = moe_setup
+        xr = jnp.asarray(np.random.default_rng(4).normal(
+            size=(6, cfg.d_model)), jnp.float32)
+        router = params["layers"]["router"][0]
+        _, eids = expert_pool.route(xr, router, cfg.top_k)
+        logits = jnp.einsum("sd,de->se", xr, router.astype(jnp.float32))
+        _, want = jax.lax.top_k(logits, cfg.top_k)
+        np.testing.assert_array_equal(np.asarray(eids), np.asarray(want))
+
+
+class TestRouterScorer:
+    def test_predicts_layer0_routing(self, moe_setup):
+        cfg, params = moe_setup
+        fn = make_router_scorer(cfg)
+        token = jnp.asarray([3, 99, 1024, 7], jnp.int32)
+        eids = np.asarray(fn(params, token))
+        assert eids.shape == (4, cfg.top_k)
+        assert (eids >= 0).all() and (eids < cfg.n_experts).all()
+
+
+def _run_engine(cfg, params, workload, **kw):
+    eng = PagedEngine(cfg, params, n_pages=24, max_batch=4, chunk=16,
+                      **kw)
+    for p, g in workload:
+        eng.submit(p, g)
+    eng.run()
+    return eng
+
+
+@pytest.fixture(scope="module")
+def workload(moe_setup):
+    cfg, _ = moe_setup
+    rng = np.random.default_rng(5)
+    return [(list(rng.integers(1, cfg.vocab, size=int(n))), int(g))
+            for n, g in zip(rng.integers(6, 20, size=6),
+                            rng.integers(4, 9, size=6))]
+
+
+class TestServeParity:
+    def test_bitwise_across_modes(self, moe_setup, workload):
+        cfg, params = moe_setup
+        engines = {
+            "dense": _run_engine(cfg, params, workload,
+                                 expert_pool="dense"),
+            "paged": _run_engine(cfg, params, workload,
+                                 expert_pool="paged"),
+            "router": _run_engine(cfg, params, workload,
+                                  expert_pool="paged",
+                                  expert_runahead="router",
+                                  expert_nsb_slots=8,
+                                  expert_runahead_pages=8),
+        }
+        base = engines["dense"]
+        for name, eng in engines.items():
+            for rid, a in base.requests.items():
+                b = eng.requests[rid]
+                assert a.out_tokens == b.out_tokens, (name, rid)
+                np.testing.assert_array_equal(a.last_logits,
+                                              b.last_logits)
+        m = engines["router"].metrics()
+        assert m["expert_pool"] == "paged"
+        assert m["expert_runahead_mode"] == "router"
+        assert m["expert_pages_touched"] > 0
+        assert m["expert_staged_pages"] > 0
+
+    def test_async_executor_parity(self, moe_setup, workload):
+        cfg, params = moe_setup
+        kw = dict(expert_pool="paged", expert_runahead="router",
+                  expert_nsb_slots=8, expert_runahead_pages=8)
+        sync = _run_engine(cfg, params, workload, **kw)
+        pipe = _run_engine(cfg, params, workload, executor="async", **kw)
+        for rid, a in sync.requests.items():
+            b = pipe.requests[rid]
+            assert a.out_tokens == b.out_tokens
+            np.testing.assert_array_equal(a.last_logits, b.last_logits)
+
+    def test_capture_tier_tags(self, moe_setup, workload):
+        from repro.core.nvr import capture
+
+        cfg, params = moe_setup
+        eng = _run_engine(cfg, params, workload, expert_pool="paged",
+                          expert_runahead="router", expert_nsb_slots=8,
+                          expert_runahead_pages=8, capture_trace=True)
+        rec = eng.ep_recorder
+        assert rec.n_events > 0
+        tiers = set(rec.tier_ids())
+        assert capture.TIER_HBM in tiers     # demand gathers
+        assert capture.TIER_NSB in tiers     # staged tile copies
+        # every recorded page id lives in the demand region
+        for ev in rec.events:
+            assert ev.min() >= 1 and ev.max() < eng.ep.n_pages
+        # the demand view lowers to a simulator trace
+        tr = rec.subset_tier(capture.TIER_HBM).to_trace()
+        assert tr is not None
+
+    def test_validation(self, moe_setup):
+        cfg, params = moe_setup
+        with pytest.raises(ValueError, match="expert_pool must be"):
+            PagedEngine(cfg, params, n_pages=24, expert_pool="bogus")
+        with pytest.raises(ValueError, match="needs expert_pool"):
+            PagedEngine(cfg, params, n_pages=24, expert_pool="dense",
+                        expert_runahead="router")
+        dense_cfg = get_config("qwen2-1.5b").reduced()
+        dp = api.init_params(dense_cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="MoE-family"):
+            PagedEngine(dense_cfg, dp, n_pages=24, expert_pool="paged")

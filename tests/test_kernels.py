@@ -82,6 +82,95 @@ def test_moe_dispatch_matmul(t, d, e, f, bt, dtype, rtol):
                                rtol=rtol, atol=rtol * 10)
 
 
+@pytest.mark.parametrize("capacity_factor", [1.25, 0.5, 0.25])
+def test_moe_ffn_vs_dispatch_matmul_with_drops(capacity_factor):
+    """``moe_ffn``'s einsum expert compute vs the ``moe_dispatch_matmul``
+    grouped-GEMM kernel on the *same* dispatch plan (``moe._route_row``),
+    including capacity factors low enough that pairs get dropped — the
+    two paths must drop identically and agree on every surviving token."""
+    import jax
+
+    from repro.models import moe
+
+    class Cfg:
+        d_model, n_experts, top_k, d_ff_expert = 64, 4, 2, 128
+
+    cfg, s, bt = Cfg(), 64, 16
+    key = jax.random.PRNGKey(7)
+    p = moe.init_moe(cfg, key, jnp.float32)
+    x = rand((1, s, cfg.d_model), jnp.float32)
+    want = moe.moe_ffn(x, p, cfg, capacity_factor=capacity_factor)
+
+    e, k, d = cfg.n_experts, cfg.top_k, cfg.d_model
+    cap = moe._capacity(s, k, e, capacity_factor)
+    assert cap % bt == 0, "capacity is 16-aligned by construction"
+    if capacity_factor < 1.0:
+        assert cap < s * k / e + 1, "low factor must actually drop pairs"
+    slot, keep, pair_token, gates, order = moe._route_row(
+        x[0], p["router"].astype(jnp.float32), e, k, cap)
+    src = jnp.where(keep[:, None], x[0][pair_token], 0.0)
+    xg = jnp.zeros((e * cap, d), x.dtype).at[
+        jnp.where(keep, slot, 0)].add(src, mode="drop")
+    # grouped GEMMs over the dispatched rows: block group ids walk the
+    # experts cap/bt blocks at a time
+    gids = jnp.repeat(jnp.arange(e, dtype=jnp.int32), cap // bt)
+    gate = jax.nn.silu(moe_dispatch_matmul(gids, xg, p["we_gate"],
+                                           block_t=bt))
+    up = moe_dispatch_matmul(gids, xg, p["we_up"], block_t=bt)
+    yg = moe_dispatch_matmul(gids, gate * up, p["we_down"], block_t=bt)
+    pair_out = jnp.where(keep[:, None], yg[slot], 0.0)
+    pair_gate = gates.reshape(-1)[order].astype(yg.dtype)
+    got = jnp.zeros((s, d), yg.dtype).at[pair_token].add(
+        pair_out * pair_gate[:, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5),
+                                        (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("tile_f", [16, 32, 64])
+def test_moe_paged_gemm_vs_dense(tile_f, dtype, rtol):
+    """Paged gate/up/down GEMMs vs the dense einsum on the same expert
+    weights, across tile sizes: page 0 is the zero scratch page, pages
+    1.. are each expert's ``[F, D]`` plane cut into ``tile_f``-row tiles
+    (the expert_pool layout), and the tiling must be value-invisible."""
+    from repro.kernels import moe_paged_down, moe_paged_gateup
+
+    r, k, e, f, d = 4, 2, 4, 128, 64
+    nt = f // tile_f
+    wg = rand((e, f, d), dtype)               # gate/up plane, [F, D] rows
+    wd = rand((e, f, d), dtype)               # down plane
+    pool_g = jnp.concatenate([jnp.zeros((1, tile_f, d), dtype),
+                              wg.reshape(e * nt, tile_f, d)])
+    pool_d = jnp.concatenate([jnp.zeros((1, tile_f, d), dtype),
+                              wd.reshape(e * nt, tile_f, d)])
+    table = jnp.arange(1, 1 + e * nt, dtype=jnp.int32).reshape(e, nt)
+    eids = jnp.asarray(RNG.integers(0, e, (r, k)), jnp.int32)
+    pids = table[eids]                        # [R, K, NT]
+    x = rand((r, d), dtype)
+    h = rand((r, k, f), dtype)
+
+    got_g = moe_paged_gateup(pids, x, pool_g)
+    want_g = jnp.einsum("rd,rkfd->rkf", x.astype(jnp.float32),
+                        wg[eids].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got_g, np.float32),
+                               np.asarray(want_g), rtol=rtol, atol=rtol)
+    np.testing.assert_array_equal(
+        np.asarray(got_g),
+        np.asarray(ref.moe_paged_gateup_ref(pids, x, pool_g)))
+
+    got_d = moe_paged_down(pids, h, pool_d)
+    want_d = jnp.einsum("rkf,rkfd->rkd", h.astype(jnp.float32),
+                        wd[eids].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got_d, np.float32),
+                               np.asarray(want_d), rtol=rtol,
+                               atol=rtol * 10)
+    np.testing.assert_allclose(
+        np.asarray(got_d, np.float32),
+        np.asarray(ref.moe_paged_down_ref(pids, h, pool_d), np.float32),
+        rtol=rtol, atol=rtol * 10)
+
+
 def test_coalesce_indices_roundtrip():
     idx = jnp.asarray(RNG.integers(0, 50, 64), jnp.int32)
     sorted_idx, inv = coalesce_indices(idx)
