@@ -31,8 +31,9 @@ import os
 import shutil
 import sys
 
+from .paths import results_dir
+
 HERE = os.path.dirname(os.path.abspath(__file__))
-RESULTS = os.path.join(HERE, "results")
 BASELINES = os.path.join(HERE, "baselines")
 
 # bench -> {headline metric: direction in which BIGGER is BETTER
@@ -93,6 +94,14 @@ GATES: dict[str, dict[str, str]] = {
         "modeled_tok_throughput_gain_router_vs_lru": "higher",
         "preemptions": "higher",     # the bench must keep covering eviction
     },
+    "workload_bench": {
+        "multiturn_bitwise_parity": "higher",    # 1.0 = asserted in-run
+        "slo_attainment_slo_fair": "higher",
+        "slo_attainment_gain": "higher",
+        "p99_ttft_slo_tenants_slo_fair": "lower",
+        "prefill_tokens_skipped": "higher",  # cross-turn reuse stays live
+        "nsb_hit_rate_realistic": "higher",
+    },
 }
 
 
@@ -104,12 +113,12 @@ def _load(path: str) -> dict | None:
 
 
 def check_bench(name: str, threshold: float,
-                results_dir: str = RESULTS,
+                results: str | None = None,
                 baselines_dir: str = BASELINES) -> list[str]:
     """Compare one bench's artifact against its baseline; returns a list
     of failure messages (empty = clean)."""
     fname = f"BENCH_{name}.json"
-    cur = _load(os.path.join(results_dir, fname))
+    cur = _load(os.path.join(results or results_dir(), fname))
     base = _load(os.path.join(baselines_dir, fname))
     if cur is None:
         return [f"{name}: no results artifact ({fname}) — did the "
@@ -146,12 +155,12 @@ def check_bench(name: str, threshold: float,
     return failures
 
 
-def update_baselines(names, results_dir: str = RESULTS,
+def update_baselines(names, results: str | None = None,
                      baselines_dir: str = BASELINES) -> int:
     os.makedirs(baselines_dir, exist_ok=True)
     copied = 0
     for name in names:
-        src = os.path.join(results_dir, f"BENCH_{name}.json")
+        src = os.path.join(results or results_dir(), f"BENCH_{name}.json")
         if not os.path.exists(src):
             print(f"  {name}: no results artifact, skipped")
             continue

@@ -124,10 +124,12 @@ def main():
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
     from repro.core.nvr.engine.sweep import write_artifacts
+
+    from .paths import results_dir
     paths = write_artifacts(
         "kernel_bench", "name,us_per_call,derived",
         [(n, f"{us:.0f}", d) for n, us, d in rows],
-        os.path.join(os.path.dirname(__file__), "results"),
+        results_dir(),
         backend=jax.default_backend())
     print(f"# artifacts: {paths['csv']} {paths['json']}")
 

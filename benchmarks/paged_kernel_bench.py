@@ -31,7 +31,7 @@ import time
 import numpy as np
 
 SCALE = float(os.environ.get("BENCH_SCALE", "0.5"))
-RESULTS = os.path.join(os.path.dirname(__file__), "results")
+from .paths import results_dir
 
 
 def _workload(cfg, n_req: int, seed: int = 0):
@@ -194,7 +194,7 @@ def paged_kernel_bench():
     write_artifacts(
         "paged_kernel_bench",
         "config,tokens_or_rows,wall_s_or_us,tok_per_s,decode_traces,"
-        "rows_padded", rows, RESULTS, scale=SCALE)
+        "rows_padded", rows, results_dir(), scale=SCALE)
     return rows, headline
 
 

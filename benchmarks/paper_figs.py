@@ -21,7 +21,7 @@ from repro.core.nvr.engine.sweep import write_artifacts
 from repro.core.nvr.traces import WORKLOADS, make_trace
 
 SCALE = float(os.environ.get("BENCH_SCALE", "0.5"))
-RESULTS = os.path.join(os.path.dirname(__file__), "results")
+from .paths import results_dir
 DTYPES = {"INT8": 1, "FP16": 2, "INT32": 4}
 
 
@@ -29,7 +29,7 @@ def _write(name: str, header: str, rows: list) -> str:
     """Persist one figure's rows as CSV + JSON via the shared sweep-runner
     artifact writer (benchmarks and sweeps share one artifact format)."""
     stem = name[:-4] if name.endswith(".csv") else name
-    paths = write_artifacts(stem, header, rows, RESULTS, scale=SCALE)
+    paths = write_artifacts(stem, header, rows, results_dir(), scale=SCALE)
     return paths["csv"]
 
 
@@ -328,7 +328,7 @@ def sweep_grid():
     t0 = time.perf_counter()
     result = run_sweep(spec)
     dt = time.perf_counter() - t0
-    write_sweep(result, RESULTS, name="sweep_grid", scale=SCALE)
+    write_sweep(result, results_dir(), name="sweep_grid", scale=SCALE)
     import statistics as _st
     sp = [ino.total / nvr.total for ino, nvr in zip(
         (r for r in result.rows if r.label == "inorder"),
@@ -458,6 +458,17 @@ def overlap_bench():
     return _ov()
 
 
+def workload_bench():
+    """The scheduling-policy layer under a bursty multi-tenant
+    multi-turn trace: slo_fair vs fifo on SLO attainment and p99 TTFT,
+    with per-(item, turn) token/logit bitwise parity against a
+    never-swapped run and the NSB/runahead hit rate re-measured under
+    realistic locality (defined in benchmarks/serve_bench.py; lazy
+    import as above)."""
+    from .serve_bench import workload_bench as _wb
+    return _wb()
+
+
 def moe_serve_bench():
     """Paged expert-weight streaming on a live MoE serve load: expert
     tiles as pages with router-keyed runahead staging the predicted
@@ -488,4 +499,5 @@ ALL = {
     "spill_bench": spill_bench,        # host spill swap vs recompute
     "overlap_bench": overlap_bench,    # pipelined vs sync executor
     "moe_serve_bench": moe_serve_bench,  # paged expert tiles + router RA
+    "workload_bench": workload_bench,  # policy layer on realistic trace
 }

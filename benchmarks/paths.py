@@ -1,0 +1,27 @@
+"""Canonical bench-artifact location.
+
+Every benchmark artifact — per-row CSV/JSON pairs from the sweep
+writer, sweep grids, and the committed-format ``BENCH_<name>.json``
+perf-trajectory files — lands in **one** directory, resolved here and
+nowhere else.  Default: ``benchmarks/results/`` next to this file.
+Override with the ``BENCH_RESULTS_DIR`` environment variable (tests
+point it at a tmpdir so harness self-tests never pollute the real
+results; CI could point it at a per-job scratch dir).
+
+Resolution happens at *write* time, not import time, so a test may set
+the env var after the bench modules are imported.
+"""
+
+from __future__ import annotations
+
+import os
+
+_DEFAULT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "results")
+
+
+def results_dir() -> str:
+    """The canonical artifact directory, created on first use."""
+    d = os.environ.get("BENCH_RESULTS_DIR") or _DEFAULT
+    os.makedirs(d, exist_ok=True)
+    return d

@@ -11,7 +11,7 @@ the headline metrics (non-finite values nulled, keys sorted), the
 BENCH_SCALE it ran at, the git sha and the harness wall time — one
 stable file per bench that CI uploads and successive commits can diff.
 
-Beyond the paper figures, ten engineering benches ride along:
+Beyond the paper figures, eleven engineering benches ride along:
   engine_speedup    — full Fig. 5 sweep, event-driven engine vs the frozen
                       seed loop, with bit-exact parity asserted per row
   sweep_grid        — workload x dtype x prefetcher x nsb_kb grid through
@@ -43,6 +43,13 @@ Beyond the paper figures, ten engineering benches ride along:
                       staging into the NSB tail — bitwise parity
                       dense=paged=paged+router (and tp=2) asserted
                       in-run, expert-tile hit-rate lift over demand-LRU
+  workload_bench    — the scheduling-policy layer on a bursty
+                      multi-tenant multi-turn trace: slo_fair beats
+                      fifo on SLO attainment + SLO-tenant p99 TTFT,
+                      per-(item, turn) tokens/logits bitwise-identical
+                      to a never-swapped run (idle-session swap + COW
+                      cross-turn reuse are correctness-free), NSB hit
+                      rate re-measured under realistic locality
 
 CI gates the deterministic headline metrics against committed baselines
 (benchmarks/check_regressions.py; see benchmarks/README.md).
@@ -67,7 +74,7 @@ import sys
 import time
 import traceback
 
-RESULTS = os.path.join(os.path.dirname(__file__), "results")
+from .paths import results_dir
 
 
 def _jsonable(v):
@@ -103,8 +110,7 @@ def _write_bench_json(name: str, headline: dict, us: float,
                       sha: str) -> str:
     """Perf-trajectory artifact: ``BENCH_<name>.json`` in the committed
     format (sorted keys, no NaNs) so successive runs diff cleanly."""
-    os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    path = os.path.join(results_dir(), f"BENCH_{name}.json")
     payload = {
         "bench": name,
         "bench_scale": float(os.environ.get("BENCH_SCALE", "0.5")),

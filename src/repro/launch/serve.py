@@ -54,6 +54,21 @@ ARCHITECTURE.md "paged expert-weight streaming"):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
       --reduced --continuous --requests 16 --expert-pool paged \
       --expert-runahead router
+
+Scheduling policies + trace-driven workloads — the front door delegates
+admission order and eviction victims to a pluggable policy
+(``--policy fifo|priority|slo_fair``; fifo is the bitwise-parity
+default), and ``--workload`` replaces the synthetic Poisson stream with
+a trace file (``serve/workload.py`` schema: bursty multi-tenant
+arrivals, priority classes, TTFT/TPOT SLOs, multi-turn conversations).
+Multi-turn sessions hold their KV between turns (``--session-hold``)
+and can park it in the host spill tier during think time
+(``--idle-swap``, needs ``--spill``):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --continuous --policy slo_fair \
+      --workload traces/bursty_multiturn.json \
+      --pages 28 --spill 64 --session-hold --idle-swap --runahead nvr
 """
 
 from __future__ import annotations
@@ -94,7 +109,18 @@ def _fmt(x, spec: str = ".3f") -> str:
 
 def _run_continuous(cfg, params, args):
     rng = np.random.default_rng(args.seed)
-    if args.shared_prefix:
+    if args.workload:
+        from ..serve.workload import load_trace, materialize
+        specs = load_trace(args.workload)
+        workload = materialize(specs, cfg.vocab, seed=args.seed)
+        n_requests = sum(1 + len(w.turns) for w in workload)
+        # a turn-N prompt is the whole conversation so far: size max_len
+        # for the longest possible final turn
+        longest = max(len(w.prompt) + w.max_new_tokens
+                      + sum(len(t.user_tokens) + t.max_new_tokens
+                            for t in w.turns)
+                      for w in workload)
+    elif args.shared_prefix:
         # multi-tenant shape: every request opens with one of a handful
         # of system prompts, so whole prompt pages repeat across requests
         sys_len = max(cfg.kv_page,
@@ -116,9 +142,11 @@ def _run_continuous(cfg, params, args):
             gen_len=(max(1, args.gen // 2), args.gen), seed=args.seed)
         workload = [(t, rng.integers(1, cfg.vocab, size=p), g)
                     for t, p, g in arrivals]
-    # sized from the built workload: a shared-prefix prompt (system
-    # prompt + suffix) may exceed --prompt-len
-    longest = max(len(p) + g for _, p, g in workload)
+    if not args.workload:
+        n_requests = len(workload)
+        # sized from the built workload: a shared-prefix prompt (system
+        # prompt + suffix) may exceed --prompt-len
+        longest = max(len(p) + g for _, p, g in workload)
     max_len = -(-longest // cfg.kv_page) * cfg.kv_page
     mesh = None
     if args.tp > 1:
@@ -141,10 +169,13 @@ def _run_continuous(cfg, params, args):
                       expert_tile_rows=args.expert_tile_rows,
                       expert_nsb_slots=args.expert_nsb_slots,
                       expert_runahead=args.expert_runahead,
-                      expert_runahead_pages=args.expert_runahead_pages)
+                      expert_runahead_pages=args.expert_runahead_pages,
+                      policy=args.policy,
+                      session_hold=args.session_hold,
+                      idle_swap=args.idle_swap)
     eng.run(workload)
     m = eng.metrics()
-    print(f"[serve-cb] {m['n_finished']}/{args.requests} requests in "
+    print(f"[serve-cb] {m['n_finished']}/{n_requests} requests in "
           f"{m['iterations']} iterations ({m['tokens_out']} tokens, "
           f"{m['preemptions']} preemptions, peak "
           f"{m['pages_peak_in_use']}/{eng.allocator.capacity} pages)")
@@ -208,6 +239,22 @@ def _run_continuous(cfg, params, args):
               f"{_fmt(m['expert_runahead_accuracy'])}, coverage "
               f"{_fmt(m['expert_runahead_coverage'])}, over-fetch "
               f"{_fmt(m['expert_runahead_overfetch'])}")
+    if args.policy != "fifo" or m["slo_attainment"] is not None:
+        print(f"[serve-cb] policy={m['policy']}: SLO attainment "
+              f"{_fmt(m['slo_attainment'])}")
+        for kind in ("per_tenant", "per_class"):
+            for key, g in m.get(kind, {}).items():
+                print(f"[serve-cb]   {kind[4:]} {key}: "
+                      f"{g['n_finished']} finished, TTFT p50/p99 "
+                      f"{_fmt(g['p50_ttft'], '.0f')}/"
+                      f"{_fmt(g['p99_ttft'], '.0f')}, SLO "
+                      f"{_fmt(g['slo_attainment'])}")
+    if m.get("turns_submitted"):
+        print(f"[serve-cb] sessions: {m['turns_submitted']} follow-up "
+              f"turns, {m['session_holds']} KV holds, "
+              f"{m['idle_swap_outs']} idle swap-outs / "
+              f"{m['idle_swap_ins']} swap-ins, "
+              f"{m['idle_evictions']} idle evictions")
     if not args.no_prefix_cache:
         print(f"[serve-cb] prefix cache: {m['prefix_hit_pages']} page "
               f"hits, {m['prefill_tokens_skipped']} prompt tokens "
@@ -310,6 +357,26 @@ def main(argv=None):
                         "with double-buffered plans and overlapped "
                         "runahead staging (tokens + logits bitwise-"
                         "identical to sync)")
+    p.add_argument("--policy", choices=("fifo", "priority", "slo_fair"),
+                   default="fifo",
+                   help="scheduling policy: fifo = strict arrival order "
+                        "(bitwise-parity default); priority = strict "
+                        "classes, FIFO within; slo_fair = per-tenant "
+                        "deficit-round-robin admission + SLO-aware "
+                        "eviction (serve/policy.py)")
+    p.add_argument("--workload", metavar="TRACE.json", default=None,
+                   help="trace-driven workload (serve/workload.py "
+                        "schema: tenants, priorities, SLOs, multi-turn "
+                        "conversations) instead of Poisson arrivals; "
+                        "see traces/bursty_multiturn.json")
+    p.add_argument("--session-hold", action="store_true",
+                   help="hold a finished turn's KV pages for the "
+                        "session's next turn (COW prefix reuse across "
+                        "turns; multi-turn traces only)")
+    p.add_argument("--idle-swap", action="store_true",
+                   help="park held session KV in the host spill tier "
+                        "during think time (needs --session-hold and "
+                        "--spill)")
     p.add_argument("--capture", action="store_true",
                    help="record page traffic and replay through the "
                         "NVR simulator")
@@ -317,6 +384,13 @@ def main(argv=None):
     args = p.parse_args(argv)
     if args.tp > 1 and not args.continuous:
         p.error("--tp needs --continuous (only the paged engine shards)")
+    if args.workload and not args.continuous:
+        p.error("--workload needs --continuous (trace-driven front door)")
+    if args.idle_swap and not args.session_hold:
+        p.error("--idle-swap needs --session-hold (nothing to park)")
+    if args.idle_swap and args.spill <= 0:
+        p.error("--idle-swap needs --spill (the host tier holds the "
+                "parked pages)")
 
     cfg = get_config(args.arch)
     if args.reduced:

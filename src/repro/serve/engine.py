@@ -260,6 +260,12 @@ class PagedServeStats(ServeStats):
     swap_out_pages: int = 0         # pages snapshotted device -> host
     swap_in_pages: int = 0          # pages restored host -> device
     fetch_backs: int = 0            # runahead-window early swap-resumes
+    # multi-turn session layer (session_hold=True)
+    session_holds: int = 0          # finished turns whose KV was pinned
+    turns_submitted: int = 0        # follow-up turns re-entering the door
+    idle_swap_outs: int = 0         # holds parked in the host spill tier
+    idle_swap_ins: int = 0          # holds restored for their next turn
+    idle_evictions: int = 0         # holds released under page pressure
     # expert-weight page traffic (expert_pool != "off"): unique tile
     # pages demanded per decode step, scored against the expert NSB
     expert_pages_touched: int = 0
@@ -664,7 +670,10 @@ class PagedEngine:
                  expert_runahead_pages: int = 16,
                  spill_pages: int = 0,
                  spill_compress: bool = False,
-                 executor: str = "sync") -> None:
+                 executor: str = "sync",
+                 policy=None,
+                 session_hold: bool = False,
+                 idle_swap: bool = False) -> None:
         if cfg.family not in ("dense", "moe") or cfg.mrope_sections:
             raise NotImplementedError(
                 "PagedEngine supports dense/moe decoder-only configs")
@@ -799,7 +808,25 @@ class PagedEngine:
             # per-iteration staging grant
             runahead_pages=(runahead_pages if runahead != "off" else
                             (expert_runahead_pages
-                             if expert_runahead != "off" else 0)))
+                             if expert_runahead != "off" else 0)),
+            policy=policy)
+        # multi-turn session layer: with session_hold, a finished
+        # conversation turn's KV stays pinned under a *holder* rid until
+        # the next turn arrives (idle_swap parks it in the host spill
+        # tier instead of HBM), and the scheduler's idle-eviction hook
+        # releases holds — idle sessions first — whenever live traffic
+        # is starved for pages
+        self.session_hold = session_hold
+        self.idle_swap = idle_swap
+        if idle_swap and spill_pages <= 0:
+            raise ValueError("idle_swap=True needs a host spill tier "
+                             "(spill_pages > 0) to park idle sessions in")
+        self._sessions: dict[int, dict] = {}
+        self._hold_order: list[int] = []    # sids with live holders, LRU
+        self._deferred: list[int] = []      # sids with a pending turn
+        self._next_sid = 0
+        if session_hold:
+            self.scheduler.idle_evict_hook = self._evict_idle_hold
         self.max_batch = max_batch
         self.chunk = chunk
         self.stats = PagedServeStats()
@@ -960,7 +987,11 @@ class PagedEngine:
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int,
-               arrival: float | None = None) -> int:
+               arrival: float | None = None,
+               tenant: str = "default", priority: int = 0,
+               session: int = -1, turn: int = 1,
+               slo_ttft: float | None = None,
+               slo_tpot: float | None = None) -> int:
         prompt = np.asarray(prompt, dtype=np.int64).reshape(-1)
         if len(prompt) + max_new_tokens > self.max_len:
             raise ValueError(
@@ -978,19 +1009,144 @@ class PagedEngine:
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
-                      arrival=self.now if arrival is None else arrival)
+                      arrival=self.now if arrival is None else arrival,
+                      tenant=tenant, priority=priority,
+                      session=session, turn=turn,
+                      slo_ttft=slo_ttft, slo_tpot=slo_tpot)
         self.requests[rid] = req
         self.scheduler.add(req)
         return rid
 
     def _finish_if_done(self, req: Request) -> None:
         if req.done:
+            if req.session >= 0 and req.session in self._sessions:
+                # before finish() frees the block table: the session
+                # layer may adopt it as an idle hold for the next turn
+                self._session_turn_done(req)
             self.scheduler.finish(req, self.now)
             self.stats.finished += 1
             if self._predictor is not None:
                 self._predictor.forget(req.rid)
             if self._ep_predictor is not None:
                 self._ep_predictor.forget(req.rid)
+
+    # -- multi-turn sessions -------------------------------------------------
+    #
+    # A conversation's turn N+1 re-enters the front door carrying the
+    # full history (turn N's prompt + generated tokens + fresh user
+    # tokens) as its prompt.  Correctness never depends on what happened
+    # to the old KV — prefix-cache attach, host-restore and recompute
+    # all produce bitwise-identical logits — so the session layer is a
+    # pure performance tier: with ``session_hold`` the finished turn's
+    # pages stay pinned under a holder rid (registered in the prefix
+    # index so the next turn attaches them), with ``idle_swap`` the hold
+    # parks in the host spill tier between turns, and under page
+    # pressure the scheduler's idle-eviction hook releases holds before
+    # any live request is preempted.
+
+    def _session_turn_done(self, req: Request) -> None:
+        sess = self._sessions[req.session]
+        sess["history"] = req.seq
+        sess["hist_computed"] = req.computed
+        if not sess["turns"]:
+            del self._sessions[req.session]
+            return
+        if self.session_hold \
+                and self.allocator.adopt_table(self._next_rid, req.rid):
+            holder = self._next_rid
+            self._next_rid += 1
+            sess["holder"] = holder
+            self._hold_order.append(req.session)
+            self.stats.session_holds += 1
+            swapped = False
+            if self.idle_swap:
+                # park the idle KV in the host tier right away; the
+                # snapshot reads drain at the next iteration boundary,
+                # before any pool write (same contract as preemption
+                # swap-out)
+                swapped = self.allocator.spill_request(holder)
+                if swapped:
+                    self.stats.idle_swap_outs += 1
+            if not swapped:
+                # publish the full sequence — prompt *and* generated
+                # tokens — so the next turn's admission attaches it
+                self.allocator.register_prefix(holder, sess["history"],
+                                               req.computed)
+        turn = sess["turns"].popleft()
+        sess["next"] = (self.now + turn.think_time, turn)
+        self._deferred.append(req.session)
+
+    def _evict_idle_hold(self) -> bool:
+        """The scheduler's idle-eviction hook: release one idle-session
+        KV hold (oldest first) and return True, or False when no hold
+        is pinning HBM pages.  Swap-out to the host tier is preferred —
+        the session keeps its restore path; freeing is the fallback
+        (registered pages park in the cached LRU, still attachable
+        until evicted)."""
+        for sid in self._hold_order:
+            holder = self._sessions[sid].get("holder")
+            if holder is None or self.allocator.is_spilled(holder):
+                continue        # spilled holds pin no HBM pages
+            if self.spill_pool is not None \
+                    and self.allocator.spill_request(holder):
+                self.stats.idle_swap_outs += 1
+            else:
+                self.allocator.free_request(holder)
+                self._sessions[sid]["holder"] = None
+                self._hold_order.remove(sid)
+            self.stats.idle_evictions += 1
+            return True
+        return False
+
+    def _submit_due_turns(self) -> None:
+        due = [sid for sid in self._deferred
+               if self._sessions[sid]["next"][0] <= self.now]
+        # deterministic re-entry order: by due tick, then session id
+        for sid in sorted(due, key=lambda s: (self._sessions[s]["next"][0],
+                                              s)):
+            self._deferred.remove(sid)
+            self._start_next_turn(sid)
+
+    def _start_next_turn(self, sid: int) -> None:
+        sess = self._sessions[sid]
+        tick, turn = sess.pop("next")
+        hist = sess["history"]
+        holder = sess.get("holder")
+        if holder is not None:
+            # an idle swap-out queued at the previous turn's finish may
+            # still be awaiting its device->host snapshot read: drain it
+            # before the restore below can reuse its source pages (and
+            # before the restore reads the host slot it fills)
+            self._apply_spill_outs()
+            if self.allocator.is_spilled(holder) \
+                    and self.allocator.resume_spilled(holder, 0):
+                # restored byte-exact onto fresh page ids; republish so
+                # this turn's admission attaches them (the copies
+                # themselves drain before any compute reads them)
+                self.stats.idle_swap_ins += 1
+                self.allocator.register_prefix(holder, hist,
+                                               sess["hist_computed"])
+            # release the hold: restored/held pages drop to the cached
+            # LRU (refcount 0, content registered) where admission
+            # attaches them — or pressure evicts them, costing
+            # recompute only.  An unrestorable snapshot (pool full) is
+            # discarded; the turn re-prefills, still bitwise-identical.
+            self.allocator.free_request(holder)
+            # perform the queued restores *now*: once the holder's refs
+            # drop, the next schedule() may hand the restored pages to
+            # anyone — no restore may still be in flight when it does
+            self._apply_swap_ins()
+            sess["holder"] = None
+            if sid in self._hold_order:
+                self._hold_order.remove(sid)
+        prompt = np.concatenate([hist, turn.user_tokens]) \
+            if len(turn.user_tokens) else hist
+        sess["turn"] = sess.get("turn", 1) + 1
+        self.stats.turns_submitted += 1
+        self.submit(prompt, turn.max_new_tokens, arrival=tick,
+                    tenant=sess["tenant"], priority=sess["priority"],
+                    session=sid, turn=sess["turn"],
+                    slo_ttft=sess["slo_ttft"], slo_tpot=sess["slo_tpot"])
 
     def _apply_cow_copies(self) -> None:
         """Replay the allocator's pending copy-on-write page copies onto
@@ -1471,17 +1627,25 @@ class PagedEngine:
         if (self.spill_pool is None or not sched.waiting
                 or len(sched.running) >= sched.max_running):
             return None
-        head = sched.waiting[0]
+        # the candidate is whoever the *policy* would admit first —
+        # under FIFO that is exactly the queue head, so the historic
+        # behaviour is unchanged; under fairness/priority policies the
+        # fetch-back restores the same request _admit would pick next
+        head = sched.policy.admit_order(list(sched.waiting), self.now)[0]
         if not head.spilled or not self.allocator.resume_spilled(
                 head.rid, max(head.prompt_len, head.computed)):
             return None
-        sched.waiting.popleft()
+        # pending idle-session snapshot reads must land before this
+        # restore writes pool pages (no-op without the session layer)
+        self._apply_spill_outs()
+        sched.waiting.remove(head)
         head.spilled = False
         head.state = RequestState.RUNNING
         if head.n_preemptions > 0:
             head.resumed_at = self.now
         sched.running.append(head)
         sched.n_swap_ins += 1
+        sched.policy.on_admit(head, self.now)
         self.stats.fetch_backs += 1
         # the restore itself rides this window too, not the next step's
         self._apply_swap_ins()
@@ -1591,17 +1755,52 @@ class PagedEngine:
                            self.ep.pages_for_experts(0, eids[i]))
         return out
 
+    def _submit_item(self, item) -> int:
+        """Front-door entry for a workload.WorkItem: submit turn 1 and
+        register the session when follow-up turns exist (they re-enter
+        via :meth:`_submit_due_turns` after the previous turn finishes
+        plus think time — a closed loop, like a real user)."""
+        sid = -1
+        if item.turns:
+            sid = self._next_sid
+            self._next_sid += 1
+            self._sessions[sid] = {
+                "turns": deque(item.turns), "holder": None,
+                "history": None, "hist_computed": 0, "turn": 1,
+                "tenant": item.tenant, "priority": item.priority,
+                "slo_ttft": item.slo_ttft, "slo_tpot": item.slo_tpot,
+            }
+        return self.submit(item.prompt, item.max_new_tokens,
+                           arrival=item.arrival, tenant=item.tenant,
+                           priority=item.priority, session=sid,
+                           slo_ttft=item.slo_ttft,
+                           slo_tpot=item.slo_tpot)
+
     def run(self, workload=None, max_iters: int = 100000) -> dict:
-        """Drive ``workload`` (iterable of (tick, prompt, max_new)) to
-        completion; returns the request table."""
-        pending = deque(sorted(workload or [], key=lambda w: w[0]))
-        while (pending or self.scheduler.has_work):
+        """Drive ``workload`` to completion; returns the request table.
+
+        Items are either legacy ``(tick, prompt, max_new)`` tuples or
+        :class:`~repro.serve.workload.WorkItem` rows (tenant, priority,
+        SLOs, multi-turn conversations).  Multi-turn items are
+        closed-loop: each follow-up turn is submitted only after the
+        previous turn finishes plus its think time, carrying the full
+        conversation history as its prompt.
+        """
+        def _tick(w):
+            return w[0] if isinstance(w, tuple) else w.arrival
+        pending = deque(sorted(workload or [], key=_tick))
+        while (pending or self._deferred or self.scheduler.has_work):
             if max_iters <= 0:
                 raise RuntimeError("run() exceeded max_iters")
             max_iters -= 1
-            while pending and pending[0][0] <= self.now:
-                tick, prompt, max_new = pending.popleft()
-                self.submit(prompt, max_new, arrival=tick)
+            while pending and _tick(pending[0]) <= self.now:
+                item = pending.popleft()
+                if isinstance(item, tuple):
+                    tick, prompt, max_new = item
+                    self.submit(prompt, max_new, arrival=tick)
+                else:
+                    self._submit_item(item)
+            self._submit_due_turns()
             self.step()
         return self.requests
 
@@ -1747,4 +1946,47 @@ class PagedEngine:
             out["expert_runahead_accuracy"] = t.accuracy
             out["expert_runahead_coverage"] = t.coverage
             out["expert_runahead_overfetch"] = t.overfetch
+        # front-door rollups: SLO attainment over requests that carry
+        # deadlines (None when nothing does), plus per-tenant/per-class
+        # slices of the same finished-request percentiles
+        out["policy"] = self.scheduler.policy.name
+        slos = [x for x in (r.slo_attained()
+                            for r in self.requests.values())
+                if x is not None]
+        out["slo_attainment"] = (sum(slos) / len(slos)) if slos else None
+
+        def _rollup(group) -> dict:
+            per = {}
+            for key, rs in sorted(group.items()):
+                g_done = [r for r in rs if r.finished_at >= 0]
+                g_ttft = [x for x in (r.ttft() for r in g_done)
+                          if x is not None]
+                g_slo = [x for x in (r.slo_attained() for r in rs)
+                         if x is not None]
+                per[key] = {
+                    "n_finished": len(g_done),
+                    "p50_ttft": percentile(g_ttft, 0.50),
+                    "p99_ttft": percentile(g_ttft, 0.99),
+                    "slo_attainment": (sum(g_slo) / len(g_slo)
+                                       if g_slo else None),
+                }
+            return per
+
+        by_tenant: dict[str, list] = {}
+        by_class: dict[int, list] = {}
+        for r in self.requests.values():
+            by_tenant.setdefault(r.tenant, []).append(r)
+            by_class.setdefault(r.priority, []).append(r)
+        if len(by_tenant) > 1 or "default" not in by_tenant:
+            out["per_tenant"] = _rollup(by_tenant)
+        if len(by_class) > 1 or 0 not in by_class:
+            out["per_class"] = _rollup(by_class)
+        if self.session_hold or self.stats.turns_submitted:
+            out["session_holds"] = self.stats.session_holds
+            out["turns_submitted"] = self.stats.turns_submitted
+            out["idle_swap_outs"] = self.stats.idle_swap_outs
+            out["idle_swap_ins"] = self.stats.idle_swap_ins
+            out["idle_evictions"] = self.stats.idle_evictions
+            out["pages_session_held"] = \
+                self.allocator.pages_session_held
         return out

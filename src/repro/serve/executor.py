@@ -30,6 +30,19 @@ commit:
   order** — the exact mutation order the sync loop performs — then run
   the runahead stage against post-commit state.
 
+Policies ride the same double buffer: the scheduler's pluggable
+admission/eviction policy (``serve/policy.py``) is deep-copied with the
+shadow state by ``schedule_speculative``, so the draft and the commit
+replay identical decisions as long as the policy honours the
+decision-replay contract (pure ``admit_order``, deterministic
+``choose_victim``, state charged only in ``on_admit``).  The engine's
+idle-session eviction hook is deliberately *detached* around the shadow
+copy: a draft admission that would need an idle-session swap-out blocks
+conservatively in the draft and is repaired at commit, because the
+shadow must never move real pages.  The overlap-window fetch-back below
+probes ``policy.admit_order(...)[0]`` — the policy's head of line — so
+non-FIFO policies resume the right request first.
+
 Why the result is bitwise-identical to the sync loop: scheduling
 consumes only token counts and page-pool state, never sampled values, so
 the committed plan sequence matches sync's; decode rows are independent

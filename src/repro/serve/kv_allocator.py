@@ -93,6 +93,8 @@ class AllocatorStats:
     swap_in_pages: int = 0     # page restores queued host -> device
     spill_failures: int = 0    # spill refused (tier off / slots short)
     spill_unregistered: int = 0  # prefix entries dropped at spill time
+    session_holds: int = 0     # block tables adopted by idle sessions
+    session_releases: int = 0  # idle-session holds released
 
 
 class KVBlockAllocator:
@@ -156,6 +158,12 @@ class KVBlockAllocator:
         # > 0 a release must not park the id in the cached LRU (see
         # _release_ref — one home per content)
         self._snap_refs: dict[int, int] = {}
+        # rids whose block table is an *idle-session hold*: KV pinned
+        # between conversation turns by the engine's session layer, not
+        # by a live request.  Pure accounting — the pages behave like
+        # any other referenced pages; the gauge lets metrics and the
+        # idle-eviction hook see how much of the pool sessions pin.
+        self._session_rids: set[int] = set()
         self.stats = AllocatorStats()
 
     # -- capacity ------------------------------------------------------------
@@ -197,6 +205,45 @@ class KVBlockAllocator:
         pages = self._tables.get(rid, [])
         bt[: len(pages)] = pages[:n_logical]
         return bt
+
+    # -- idle-session holds --------------------------------------------------
+
+    def adopt_table(self, new_rid: int, old_rid: int) -> bool:
+        """Hand ``old_rid``'s block table (and its prefix-registration
+        cursor) to ``new_rid`` without touching refcounts.
+
+        The engine's session layer uses this at request completion to
+        keep a finished conversation turn's KV alive under a *holder*
+        rid between turns — the pages stay referenced (un-evictable)
+        until the holder is spilled (idle swap-out) or freed.  The
+        holder is marked so :meth:`pages_session_held` and the tier
+        invariants can account for session-pinned pages."""
+        if new_rid in self._tables or new_rid in self._spilled \
+                or old_rid not in self._tables:
+            return False
+        self._tables[new_rid] = self._tables.pop(old_rid)
+        st = self._reg_state.pop(old_rid, None)
+        if st is not None:
+            self._reg_state[new_rid] = st
+        self._session_rids.add(new_rid)
+        self.stats.session_holds += 1
+        return True
+
+    @property
+    def session_rids(self) -> frozenset:
+        return frozenset(self._session_rids)
+
+    @property
+    def pages_session_held(self) -> int:
+        """HBM pages pinned by idle-session holders."""
+        return sum(len(self._tables.get(r, ())) for r in self._session_rids)
+
+    @property
+    def pages_session_spilled(self) -> int:
+        """Host spill slots owned by idle-session holders (idle
+        swap-outs waiting for the conversation's next turn)."""
+        return sum(len(self._spilled[r][0]) for r in self._session_rids
+                   if r in self._spilled)
 
     # -- page plumbing -------------------------------------------------------
 
@@ -549,6 +596,12 @@ class KVBlockAllocator:
         # the cached-but-free LRU (one home per content)
         assert cached.isdisjoint(snaps), \
             f"pages in cached LRU and spill pool: {cached & set(snaps)}"
+        # idle-session holders always have a home: a block table (pinned
+        # in HBM) or a spill record (idle swap-out) — a mark without
+        # either would be leaked session accounting
+        for r in self._session_rids:
+            assert r in self._tables or r in self._spilled, \
+                f"session hold {r} has neither a table nor a snapshot"
 
     # -- release -------------------------------------------------------------
 
@@ -563,6 +616,9 @@ class KVBlockAllocator:
             slots, old_pages = rec
             self._spill_free.extend(slots)
             self._drop_snap_refs(old_pages)
+        if rid in self._session_rids:
+            self._session_rids.discard(rid)
+            self.stats.session_releases += 1
         pages = self._tables.pop(rid, [])
         self._reg_state.pop(rid, None)     # a resume rebuilds its table
         self.stats.frees += len(pages)

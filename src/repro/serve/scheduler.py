@@ -4,9 +4,14 @@ One scheduler iteration mixes *decode steps* (one token per running
 request) and *prefill chunks* (up to ``chunk`` prompt tokens of one
 request) under a shared per-iteration token budget — the Orca/vLLM
 iteration-level scheduling model, sized down to this repo's CPU smoke
-scale.  Admission is strict FIFO with head-of-line blocking: a request is
-only admitted when the paged allocator can hold its whole prompt, and the
-queue head is never skipped in favour of a smaller later request.
+scale.  Admission *order* and eviction *victim choice* are delegated to a
+pluggable :class:`~repro.serve.policy.SchedPolicy`; the default
+:class:`~repro.serve.policy.FifoPolicy` is strict FIFO with head-of-line
+blocking — a request is only admitted when the paged allocator can hold
+its whole prompt, and the queue head is never skipped in favour of a
+smaller later request.  Whatever the policy, the scheduler walks the
+policy's admission order and stops at the first failed reservation, so
+head-of-line blocking applies to the *policy's* head of line.
 
 Admission *reserves*: ``_admit`` allocates the entire prompt's pages
 (all-or-nothing ``ensure_prompt``, attaching cached prefix pages for
@@ -21,9 +26,12 @@ the prompt end, so the final prefill chunk always runs and produces the
 first-token logits.
 
 Preemption: when a decode step needs a fresh KV page and the pool is
-exhausted, the most-recently-admitted running request is evicted and
-re-enters the *front* of the waiting queue, keeping its original FIFO
-priority.  With a host spill tier configured (``allocator.spill_pages >
+exhausted, the policy's chosen victim (FIFO: the most-recently-admitted
+running request) is evicted and re-enters the *front* of the waiting
+queue, keeping its original FIFO rank.  Before any running request is
+victimised, the optional ``idle_evict_hook`` gets a chance to release
+idle-session KV holds (conversation turns parked between user messages)
+— idle sessions are always preferred victims over live requests.  With a host spill tier configured (``allocator.spill_pages >
 0``) eviction is **swap-out**: the victim's pages snapshot to host slots
 and its KV frontier (``computed``) is preserved, so resume is a
 host->device restore instead of recompute.  Without the tier — or when
@@ -69,9 +77,12 @@ import enum
 from collections import deque
 from dataclasses import dataclass, field
 
+import math
+
 import numpy as np
 
 from .kv_allocator import KVBlockAllocator
+from .policy import SchedPolicy, make_policy
 
 
 class RequestState(enum.Enum):
@@ -114,6 +125,13 @@ class Request:
     resume_gaps: list = field(default_factory=list)  # resume -> next token
     last_token_at: float = -1.0     # most recent emitted-token tick
     token_ticks: list = field(default_factory=list)  # tick per emitted token
+    # -- front-door attributes (policy + workload layer) --
+    tenant: str = "default"         # fairness accounting unit
+    priority: int = 0               # class, lower = more important
+    session: int = -1               # conversation id; -1 = single-shot
+    turn: int = 1                   # 1-based turn within the session
+    slo_ttft: float | None = None   # TTFT deadline in scheduler ticks
+    slo_tpot: float | None = None   # mean inter-token deadline, ticks
 
     @property
     def prompt_len(self) -> int:
@@ -165,6 +183,23 @@ class Request:
             return None
         return ((self.last_token_at - self.first_token_at)
                 / (len(self.out_tokens) - 1))
+
+    def slo_attained(self) -> bool | None:
+        """Did this request meet every deadline it carries?  ``None``
+        when it carries none (excluded from attainment denominators).
+        A TTFT deadline with no first token yet counts as missed —
+        unfinished starved requests must drag attainment down, not
+        vanish from it."""
+        if self.slo_ttft is None and self.slo_tpot is None:
+            return None
+        ok = True
+        if self.slo_ttft is not None:
+            t = self.ttft()
+            ok = ok and (t is not None and t <= self.slo_ttft)
+        if self.slo_tpot is not None:
+            g = self.tpot()
+            ok = ok and (g is None or g <= self.slo_tpot)
+        return ok
 
 
 @dataclass
@@ -257,10 +292,36 @@ class PoissonArrivals:
 
 
 class TraceArrivals:
-    """Replay an explicit ``(tick, prompt_len, max_new)`` workload."""
+    """Replay an explicit ``(tick, prompt_len, max_new)`` workload.
+
+    The schedule is validated up front — non-empty, finite values,
+    non-decreasing arrival times, positive lengths — and a violation
+    raises ``ValueError`` naming the offending entry, instead of
+    silently yielding garbage the engine only trips over many
+    iterations later (or worse, never: a NaN tick just sorts
+    somewhere)."""
 
     def __init__(self, schedule) -> None:
-        self.schedule = [(float(t), int(p), int(g)) for t, p, g in schedule]
+        rows = [(float(t), int(p), int(g)) for t, p, g in schedule]
+        if not rows:
+            raise ValueError("TraceArrivals: empty schedule — a trace "
+                             "must contain at least one arrival")
+        prev = None
+        for i, (t, p, g) in enumerate(rows):
+            if not math.isfinite(t):
+                raise ValueError(f"TraceArrivals: non-finite arrival "
+                                 f"tick {t!r} at entry {i}")
+            if prev is not None and t < prev:
+                raise ValueError(
+                    f"TraceArrivals: arrival times must be "
+                    f"non-decreasing, but entry {i} ({t}) precedes "
+                    f"entry {i - 1} ({prev})")
+            if p <= 0 or g <= 0:
+                raise ValueError(
+                    f"TraceArrivals: entry {i} has prompt_len={p}, "
+                    f"max_new={g}; both must be >= 1")
+            prev = t
+        self.schedule = rows
 
     def __iter__(self):
         return iter(self.schedule)
@@ -273,8 +334,21 @@ class Scheduler:
                  chunk: int = 16, token_budget: int = 32,
                  max_running: int = 0,
                  row_buckets: tuple[int, ...] = (),
-                 runahead_pages: int = 0) -> None:
+                 runahead_pages: int = 0,
+                 policy: SchedPolicy | str | None = None) -> None:
         self.allocator = allocator
+        # admission order + eviction victims are the policy's decisions;
+        # the default FifoPolicy reproduces the pre-policy scheduler
+        # verbatim.  The policy is deep-copied with the scheduler by
+        # schedule_speculative, so its decisions replay identically in
+        # draft and commit (the decision-replay contract).
+        self.policy = make_policy(policy or "fifo")
+        # optional engine callback: release one idle-session KV hold and
+        # return True, or False when nothing is held.  Consulted before
+        # any running request is victimised and before admission gives
+        # up — idle conversations yield to live traffic.  Excluded from
+        # speculative deep copies (a draft must not move real pages).
+        self.idle_evict_hook = None
         self.max_batch = max_batch
         self.chunk = chunk
         self.token_budget = max(token_budget, 1)
@@ -293,6 +367,7 @@ class Scheduler:
         self.waiting: deque[Request] = deque()
         self.running: list[Request] = []
         self._admission_seq = 0
+        self._now = 0.0                   # tick of the schedule() in flight
         self.n_preemptions = 0
         self.n_swap_outs = 0              # preemptions served by spill
         self.n_swap_ins = 0               # resumes served by restore
@@ -334,51 +409,73 @@ class Scheduler:
 
     def _ensure_with_preemption(self, req: Request, n_tokens: int) -> bool:
         """Allocate pages for ``req`` up to ``n_tokens`` positions,
-        evicting later-admitted running requests if the pool is full.
-        Returns False if ``req`` itself had to be preempted (it is the
-        youngest request and still cannot fit)."""
+        evicting the policy's chosen victims if the pool is full.
+        Idle-session KV holds are released first (always-preferred
+        victims); then the policy picks among running requests.  Returns
+        False if ``req`` itself had to be preempted (the policy found no
+        acceptable victim and deferred the requester)."""
         while not self.allocator.ensure(req.rid, n_tokens):
-            victims = [r for r in self.running
-                       if r is not req
-                       and r.admission_seq > req.admission_seq]
-            if victims:
-                self._preempt(max(victims, key=lambda r: r.admission_seq))
+            # idle conversations yield before any live request does
+            if self.idle_evict_hook is not None and self.idle_evict_hook():
                 continue
-            # no younger victim: preempt the requester itself (defer)
+            victim = self.policy.choose_victim(self.running, req,
+                                               self._now, self)
+            if victim is not None and victim is not req \
+                    and any(victim is r for r in self.running):
+                self._preempt(victim)
+                continue
+            # no acceptable victim: preempt the requester itself (defer)
             self._preempt(req)
             return False
         return True
 
+    def _try_reserve(self, head: Request) -> bool:
+        """One admission attempt for ``head``: all-or-nothing swap-in or
+        prompt reservation.  Pure mechanism — no queue mutation."""
+        if head.spilled:
+            # swap-resume: restore the snapshot onto fresh HBM pages
+            # (all-or-nothing, like a fresh reservation) and keep the
+            # preserved KV frontier — no re-prefill, no replay
+            if not self.allocator.resume_spilled(
+                    head.rid, max(head.prompt_len, head.computed)):
+                return False
+            head.spilled = False
+            self.n_swap_ins += 1
+            return True
+        # reserve the whole prompt now (all-or-nothing, cached prefix
+        # pages attach for free): an admitted request can never lose its
+        # prompt pages to this iteration's other allocations
+        ok, cached = self.allocator.ensure_prompt(head.rid, head.prompt)
+        if not ok:
+            return False
+        # fast-forward past prefix-cached pages, keeping the last prompt
+        # token to recompute: its prefill produces the first-token
+        # logits (its page was COW'd on a full hit)
+        head.computed = min(cached, head.prompt_len - 1)
+        head.cached_tokens = head.computed
+        self.prefill_tokens_skipped += head.computed
+        return True
+
     def _admit(self, now: float) -> list[Request]:
         admitted = []
-        while (self.waiting and len(self.running) < self.max_running):
-            head = self.waiting[0]
-            if head.spilled:
-                # swap-resume: restore the snapshot onto fresh HBM pages
-                # (all-or-nothing, like a fresh reservation) and keep the
-                # preserved KV frontier — no re-prefill, no replay
-                if not self.allocator.resume_spilled(
-                        head.rid, max(head.prompt_len, head.computed)):
-                    break  # head-of-line blocking keeps admission FIFO
-                head.spilled = False
-                self.n_swap_ins += 1
-            else:
-                # reserve the whole prompt now (all-or-nothing, cached
-                # prefix pages attach for free): an admitted request can
-                # never lose its prompt pages to this iteration's other
-                # allocations
-                ok, cached = self.allocator.ensure_prompt(head.rid,
-                                                          head.prompt)
-                if not ok:
-                    break  # head-of-line blocking keeps admission FIFO
-                # fast-forward past prefix-cached pages, keeping the last
-                # prompt token to recompute: its prefill produces the
-                # first-token logits (its page was COW'd on a full hit)
-                head.computed = min(cached, head.prompt_len - 1)
-                head.cached_tokens = head.computed
-                self.prefill_tokens_skipped += head.computed
-            self.waiting.popleft()
+        if not self.waiting:
+            return admitted
+        # the policy ranks the whole queue once per pass; nothing else
+        # mutates ``waiting`` during admission, so the snapshot is exact
+        for head in self.policy.admit_order(list(self.waiting), now):
+            if len(self.running) >= self.max_running:
+                break
+            while not self._try_reserve(head):
+                # idle-session KV yields its pages before admission
+                # blocks on them
+                if self.idle_evict_hook is None \
+                        or not self.idle_evict_hook():
+                    # head-of-line blocking on the *policy's* order: the
+                    # ranked head is never skipped for a smaller request
+                    return admitted
+            self.waiting.remove(head)
             head.state = RequestState.RUNNING
+            self.policy.on_admit(head, now)
             if head.n_preemptions > 0:
                 # resume-TTFT clock for both policies: the engine appends
                 # (token time - resumed_at) to resume_gaps at the next
@@ -407,6 +504,7 @@ class Scheduler:
         per iteration.
         """
         plan = IterationPlan()
+        self._now = now         # victim scoring reads the current tick
         budget = self.token_budget
 
         # decode / replay steps: requests past their prompt frontier.
@@ -512,7 +610,17 @@ class Scheduler:
             memo[id(req.prompt)] = req.prompt
             if req.last_logits is not None:
                 memo[id(req.last_logits)] = req.last_logits
-        shadow = copy.deepcopy(self, memo)
+        # the idle-evict hook is an engine-bound callback: detach it
+        # around the copy so (a) deepcopy never recurses into the
+        # engine, and (b) the shadow cannot release real session holds
+        # while drafting.  A draft admission that would have needed an
+        # idle eviction simply blocks; commit() performs the real
+        # eviction and repairs the plan.
+        hook, self.idle_evict_hook = self.idle_evict_hook, None
+        try:
+            shadow = copy.deepcopy(self, memo)
+        finally:
+            self.idle_evict_hook = hook
         if in_flight is not None:
             by_rid = {r.rid: r for r in shadow.running}
             # decode stream: each row's frontier advances; frontier rows

@@ -15,6 +15,17 @@ and plane — K, V, and the fp32 page summary the TopK selection reads —
 so a swap-in restores not just attention content but the *selection*
 behaviour byte-for-byte.
 
+Beyond preemption, the tier doubles as the parking lot for **idle
+multi-turn sessions** (``PagedEngine(session_hold=True, idle_swap=True)``):
+when a conversation turn finishes, the engine adopts the request's block
+table onto a holder rid and spills it here for the think-time gap, then
+restores it — same snapshot/restore path, same strict drain order — when
+the follow-up turn arrives carrying the conversation history.  Because
+slots snapshot K, V, *and* the selection summaries exactly (uncompressed
+tier), a resumed turn's prefix attach is byte-identical to a session
+that was never swapped out; the allocator's ``session_rids`` accounting
+distinguishes these parked pages from live-request spills.
+
 Storage is pinned host memory by intent: arrays are committed to the
 first CPU device via ``jax.device_put`` when a non-CPU backend is
 present (so transfers are real host<->HBM DMAs), and plain numpy on a

@@ -1,0 +1,338 @@
+"""Trace-driven workload generation: bursty arrivals, heavy tails,
+tenant mixes, multi-turn conversations.
+
+Every benchmark before this layer drove the serve stack with single-shot
+uniform Poisson traffic — which under-stresses exactly the machinery the
+NVR story cares about: the prefix cache (no cross-turn reuse), the spill
+tier (no idle sessions to park), and the runahead predictors (uniform
+arrival spacing means no bursty locality).  This module produces the
+realistic shape:
+
+* **Bursty/diurnal arrivals** — a Markov-modulated Poisson process:
+  the base rate follows a slow sinusoid (the diurnal swell) and
+  alternates calm/burst phases where the burst multiplies the rate.
+* **Heavy-tailed lengths** — prompt lengths are clipped lognormal,
+  output lengths clipped Zipf; most requests are short, a few dominate.
+* **Tenant mixes** — each request belongs to a tenant drawn from a
+  weighted mix; a tenant carries a priority class, TTFT/TPOT SLOs, its
+  own length scales, and a shared system prompt (so same-tenant
+  requests hit the COW prefix cache the way production traffic does).
+* **Multi-turn conversations** — a request may carry follow-up turns;
+  each turn re-enters the front door after a think time with a prompt
+  equal to the full conversation history plus fresh user tokens,
+  exercising cross-turn COW prefix reuse and idle-session swap-out
+  between turns.
+
+Two representations:
+
+* :class:`RequestSpec` — lengths only, JSON-serialisable: what a trace
+  file (``traces/*.json``) stores and :func:`save_trace` /
+  :func:`load_trace` round-trip.
+* :class:`WorkItem` — concrete token arrays, produced by
+  :func:`materialize` under an explicit seed; what
+  ``PagedEngine.run`` consumes.  Same spec + same seed + same vocab =>
+  identical arrays, so every bench built on this module is reproducible
+  run-to-run (asserted in tests).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class TurnSpec:
+    """One follow-up conversation turn, lengths only."""
+
+    think_time: float        # ticks after the previous turn finishes
+    new_tokens: int          # fresh user tokens appended to the history
+    max_new_tokens: int      # generation budget for this turn
+
+
+@dataclass
+class RequestSpec:
+    """One front-door arrival, lengths only (JSON-serialisable)."""
+
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+    tenant: str = "default"
+    priority: int = 0
+    slo_ttft: float | None = None
+    slo_tpot: float | None = None
+    turns: list = field(default_factory=list)   # [TurnSpec]
+
+    def total_len(self) -> int:
+        """KV positions the *last* turn's sequence occupies — the
+        engine ``max_len`` this conversation needs."""
+        n = self.prompt_len + self.max_new_tokens
+        for t in self.turns:
+            n += t.new_tokens + t.max_new_tokens
+        return n
+
+
+@dataclass
+class Turn:
+    """A materialised follow-up turn: concrete user tokens."""
+
+    think_time: float
+    user_tokens: np.ndarray
+    max_new_tokens: int
+
+
+@dataclass
+class WorkItem:
+    """A materialised arrival: what ``PagedEngine.run`` consumes."""
+
+    arrival: float
+    prompt: np.ndarray
+    max_new_tokens: int
+    tenant: str = "default"
+    priority: int = 0
+    slo_ttft: float | None = None
+    slo_tpot: float | None = None
+    turns: list = field(default_factory=list)   # [Turn]
+
+
+@dataclass
+class TenantSpec:
+    """One tenant's traffic profile in the mix."""
+
+    name: str
+    weight: float = 1.0          # share of arrivals
+    priority: int = 0            # class, lower = more important
+    slo_ttft: float | None = None
+    slo_tpot: float | None = None
+    # lognormal prompt-length parameters (of the underlying normal)
+    prompt_mu: float = 2.5
+    prompt_sigma: float = 0.6
+    prompt_cap: int = 48
+    # Zipf output-length parameters
+    gen_zipf_a: float = 2.0
+    gen_cap: int = 16
+    multi_turn_p: float = 0.0    # chance each turn spawns a follow-up
+    max_turns: int = 3
+    think_mean: float = 6.0      # mean think time between turns, ticks
+    shared_prefix: int = 0       # tenant system-prompt tokens (COW bait)
+
+
+def synthesize(n_requests: int, seed: int,
+               tenants: list[TenantSpec],
+               base_rate: float = 0.5,
+               burst_factor: float = 6.0,
+               burst_len: float = 12.0,
+               calm_len: float = 36.0,
+               diurnal_amp: float = 0.5,
+               diurnal_period: float = 200.0) -> list:
+    """Generate ``n_requests`` :class:`RequestSpec` rows, sorted by
+    arrival.  Deterministic under ``seed``.
+
+    Arrivals are a Markov-modulated Poisson process: exponential gaps at
+    instantaneous rate ``base_rate * diurnal(t) * (burst_factor if the
+    process is inside a burst phase else 1)``, with exponential
+    calm/burst phase lengths — so load comes in waves, and during a
+    wave one tenant's burst can head-of-line block the others under
+    FIFO (the contention the policy layer exists to fix).
+    """
+    if n_requests <= 0:
+        raise ValueError(f"n_requests must be >= 1, got {n_requests}")
+    if not tenants:
+        raise ValueError("need at least one TenantSpec")
+    rng = np.random.default_rng(seed)
+    weights = np.array([max(t.weight, 0.0) for t in tenants], dtype=float)
+    if weights.sum() <= 0:
+        raise ValueError("tenant weights must sum to > 0")
+    weights /= weights.sum()
+
+    specs: list[RequestSpec] = []
+    t = 0.0
+    in_burst = False
+    phase_end = float(rng.exponential(calm_len))
+    for _ in range(n_requests):
+        # phase machine first, then a gap at the phase's rate
+        while t >= phase_end:
+            in_burst = not in_burst
+            phase_end = t + float(rng.exponential(
+                burst_len if in_burst else calm_len))
+        diurnal = 1.0 + diurnal_amp * math.sin(
+            2.0 * math.pi * t / diurnal_period)
+        rate = base_rate * max(diurnal, 0.05) \
+            * (burst_factor if in_burst else 1.0)
+        t += float(rng.exponential(1.0 / rate))
+
+        ten = tenants[int(rng.choice(len(tenants), p=weights))]
+        p = int(np.clip(round(rng.lognormal(ten.prompt_mu,
+                                            ten.prompt_sigma)),
+                        1, ten.prompt_cap))
+        g = int(np.clip(rng.zipf(ten.gen_zipf_a), 1, ten.gen_cap))
+        turns: list[TurnSpec] = []
+        while (len(turns) + 1 < ten.max_turns
+               and rng.random() < ten.multi_turn_p):
+            turns.append(TurnSpec(
+                think_time=float(
+                    np.clip(rng.exponential(ten.think_mean), 1.0, None)),
+                new_tokens=int(np.clip(
+                    round(rng.lognormal(ten.prompt_mu - 0.7,
+                                        ten.prompt_sigma)),
+                    1, ten.prompt_cap)),
+                max_new_tokens=int(np.clip(rng.zipf(ten.gen_zipf_a),
+                                           1, ten.gen_cap))))
+        specs.append(RequestSpec(
+            arrival=round(t, 3), prompt_len=p, max_new_tokens=g,
+            tenant=ten.name, priority=ten.priority,
+            slo_ttft=ten.slo_ttft, slo_tpot=ten.slo_tpot, turns=turns))
+    specs.sort(key=lambda s: s.arrival)
+    return specs
+
+
+def materialize(specs, vocab: int, seed: int,
+                shared_prefix: dict | None = None) -> list:
+    """Turn :class:`RequestSpec` rows into :class:`WorkItem` rows with
+    concrete token arrays.  Deterministic under ``seed``.
+
+    ``shared_prefix`` maps tenant name -> system-prompt length; each
+    tenant gets one fixed token array reused as the head of every one of
+    its prompts (drawn once per tenant, so same-tenant requests share a
+    COW-cacheable prefix — the "realistic locality" the runahead and
+    prefix-cache numbers should be measured under).
+    """
+    rng = np.random.default_rng(seed)
+    shared_prefix = shared_prefix or {}
+    sys_prompts: dict[str, np.ndarray] = {}
+    for name in sorted(shared_prefix):
+        n = int(shared_prefix[name])
+        sys_prompts[name] = rng.integers(0, vocab, size=n) if n > 0 \
+            else np.zeros((0,), dtype=np.int64)
+    items: list[WorkItem] = []
+    for s in specs:
+        head = sys_prompts.get(s.tenant)
+        body_len = s.prompt_len if head is None \
+            else max(s.prompt_len - len(head), 1)
+        body = rng.integers(0, vocab, size=body_len)
+        prompt = body if head is None else np.concatenate([head, body])
+        turns = [Turn(think_time=t.think_time,
+                      user_tokens=rng.integers(0, vocab,
+                                               size=t.new_tokens),
+                      max_new_tokens=t.max_new_tokens)
+                 for t in s.turns]
+        items.append(WorkItem(
+            arrival=s.arrival, prompt=prompt,
+            max_new_tokens=s.max_new_tokens, tenant=s.tenant,
+            priority=s.priority, slo_ttft=s.slo_ttft,
+            slo_tpot=s.slo_tpot, turns=turns))
+    return items
+
+
+# -- trace files -------------------------------------------------------------
+
+TRACE_VERSION = 1
+
+
+def save_trace(path: str, specs, meta: dict | None = None) -> None:
+    """Write specs to a JSON trace file (stable key order)."""
+    doc = {
+        "version": TRACE_VERSION,
+        "meta": meta or {},
+        "requests": [
+            {"arrival": s.arrival, "prompt_len": s.prompt_len,
+             "max_new": s.max_new_tokens, "tenant": s.tenant,
+             "priority": s.priority, "slo_ttft": s.slo_ttft,
+             "slo_tpot": s.slo_tpot,
+             "turns": [{"think": t.think_time, "new_tokens": t.new_tokens,
+                        "max_new": t.max_new_tokens} for t in s.turns]}
+            for s in specs
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, allow_nan=False)
+        f.write("\n")
+
+
+def load_trace(path: str) -> list:
+    """Read a JSON trace file back into validated RequestSpec rows.
+
+    The same schedule validation TraceArrivals performs (non-empty,
+    finite, non-decreasing, positive lengths) applies here — a corrupt
+    trace fails at load with the offending entry named."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != TRACE_VERSION:
+        raise ValueError(f"{path}: unsupported trace version "
+                         f"{doc.get('version')!r} (expected "
+                         f"{TRACE_VERSION})")
+    rows = doc.get("requests", [])
+    if not rows:
+        raise ValueError(f"{path}: empty trace — no requests")
+    specs = []
+    prev = None
+    for i, r in enumerate(rows):
+        t = float(r["arrival"])
+        if not math.isfinite(t):
+            raise ValueError(f"{path}: non-finite arrival at entry {i}")
+        if prev is not None and t < prev:
+            raise ValueError(f"{path}: arrivals must be non-decreasing "
+                             f"(entry {i}: {t} < {prev})")
+        prev = t
+        p, g = int(r["prompt_len"]), int(r["max_new"])
+        if p <= 0 or g <= 0:
+            raise ValueError(f"{path}: entry {i} has prompt_len={p}, "
+                             f"max_new={g}; both must be >= 1")
+        specs.append(RequestSpec(
+            arrival=t, prompt_len=p, max_new_tokens=g,
+            tenant=str(r.get("tenant", "default")),
+            priority=int(r.get("priority", 0)),
+            slo_ttft=r.get("slo_ttft"), slo_tpot=r.get("slo_tpot"),
+            turns=[TurnSpec(think_time=float(u["think"]),
+                            new_tokens=int(u["new_tokens"]),
+                            max_new_tokens=int(u["max_new"]))
+                   for u in r.get("turns", [])]))
+    return specs
+
+
+# -- the canonical bursty multi-tenant multi-turn preset ---------------------
+
+def bursty_multiturn_tenants() -> list:
+    """The tenant mix behind ``traces/bursty_multiturn.json`` and
+    ``workload_bench``: an interactive chat tenant with tight SLOs and
+    multi-turn sessions, a second interactive tenant, and a bursty
+    batch tenant with long prompts and no deadlines whose waves
+    head-of-line block everyone under FIFO."""
+    return [
+        TenantSpec(name="chat", weight=3.0, priority=0,
+                   slo_ttft=10.0, slo_tpot=4.0,
+                   prompt_mu=2.2, prompt_sigma=0.5, prompt_cap=24,
+                   gen_zipf_a=2.2, gen_cap=8,
+                   multi_turn_p=0.6, max_turns=3, think_mean=5.0,
+                   shared_prefix=8),
+        TenantSpec(name="assist", weight=2.0, priority=1,
+                   slo_ttft=18.0, slo_tpot=6.0,
+                   prompt_mu=2.6, prompt_sigma=0.6, prompt_cap=32,
+                   gen_zipf_a=2.0, gen_cap=10,
+                   multi_turn_p=0.3, max_turns=2, think_mean=8.0,
+                   shared_prefix=8),
+        TenantSpec(name="batch", weight=3.0, priority=2,
+                   slo_ttft=None, slo_tpot=None,
+                   prompt_mu=3.5, prompt_sigma=0.4, prompt_cap=40,
+                   gen_zipf_a=1.8, gen_cap=16,
+                   multi_turn_p=0.0, max_turns=1,
+                   shared_prefix=0),
+    ]
+
+
+def bursty_multiturn(n_requests: int, seed: int = 7) -> list:
+    """RequestSpec rows for the canonical bursty multi-tenant
+    multi-turn trace (deterministic under ``seed``)."""
+    return synthesize(n_requests, seed,
+                      tenants=bursty_multiturn_tenants(),
+                      base_rate=0.5, burst_factor=12.0,
+                      burst_len=14.0, calm_len=22.0,
+                      diurnal_amp=0.6, diurnal_period=120.0)
+
+
+def shared_prefix_map(tenants) -> dict:
+    """tenant name -> shared system-prompt length, for materialize()."""
+    return {t.name: t.shared_prefix for t in tenants if t.shared_prefix}

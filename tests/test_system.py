@@ -86,7 +86,7 @@ def test_serving_engine_nsb_stats():
     assert s.hot_hit_rate > 0.5
 
 
-def test_benchmark_runner_exit_codes(monkeypatch, capsys):
+def test_benchmark_runner_exit_codes(monkeypatch, capsys, tmp_path):
     """benchmarks.run must exit non-zero when a named benchmark raises
     (CI smoke jobs depend on the failure propagating) and 2 on unknown
     names."""
@@ -105,8 +105,12 @@ def test_benchmark_runner_exit_codes(monkeypatch, capsys):
     def fine():
         return [("r", 1)], {"metric": 1.0}
 
+    # artifacts (BENCH_fine.json) go to the canonical results dir —
+    # point it at a tmpdir so the self-test never pollutes real results
+    monkeypatch.setenv("BENCH_RESULTS_DIR", str(tmp_path))
     monkeypatch.setattr(paper_figs, "ALL", {"boom": boom, "fine": fine})
     assert run.main(["fine"]) == 0
+    assert (tmp_path / "BENCH_fine.json").exists()
     assert run.main(["boom"]) == 1
     assert run.main(["boom", "fine"]) == 1      # keeps running the rest
     out = capsys.readouterr().out
